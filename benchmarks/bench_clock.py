@@ -1,0 +1,140 @@
+"""Paper-claim benchmarks for the bloom clock itself.
+
+One function per claim; each returns CSV rows (name, us_per_call, derived).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clock as bc
+from repro.core import vector_clock as vc
+from repro.core.sim import SimConfig, monte_carlo_overlap, run_sim
+from repro.kernels import ops
+
+
+def _timeit(fn, *args, n=20):
+    fn(*args)  # compile / warm
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def bench_eq3_fp_rate() -> list:
+    """Paper §3 Eq. 3 vs Monte-Carlo ground truth (incl. the 0.29 example)."""
+    rows = []
+    us = _timeit(lambda: bc.fp_rate(7.0, 10.0, 6))
+    paper_example = float(bc.fp_rate(7, 10, 6))
+    rows.append(("eq3_paper_example_m6", us,
+                 f"pred={paper_example:.4f} (paper: 0.29)"))
+    for m, sa, sb in [(6, 7, 10), (32, 30, 40), (64, 30, 90), (256, 100, 200)]:
+        pred = float(bc.fp_rate(sa, sb, m))
+        mc = monte_carlo_overlap(m, sa, sb, trials=100_000)
+        rows.append((f"eq3_vs_mc_m{m}_a{sa}_b{sb}", 0.0,
+                     f"pred={pred:.4f} mc={mc:.4f} conservative={mc <= pred + 1e-3}"))
+    return rows
+
+
+def bench_space_vs_n() -> list:
+    """Paper §2/§4: wire bytes, bloom O(m) vs vector O(N)."""
+    rows = []
+    m = 1024  # runtime default: 4KB/clock
+    for n in (64, 256, 1024, 4096, 65_536, 1_048_576):
+        vb = vc.wire_bytes(n)
+        bb = m * 4
+        rows.append((f"wire_bytes_n{n}", 0.0,
+                     f"vector={vb}B bloom={bb}B ratio={vb / bb:.2f}"))
+    # compression (§4) shrinks further: residuals fit u8 once spread
+    c = bc.zeros(m, 4)
+    hi = jnp.zeros((2000,), jnp.uint32)
+    lo = jnp.arange(2000, dtype=jnp.uint32)
+    c = bc.tick(c, hi, lo)
+    z = bc.compress(c)
+    u8_ok = int(jnp.max(z.cells)) < 256
+    rows.append(("compressed_cells_fit_u8_after_2k_events", 0.0,
+                 f"base={int(z.base)} max_resid={int(jnp.max(z.cells))} u8={u8_ok}"))
+    return rows
+
+
+def bench_op_throughput() -> list:
+    """Clock-op latency: core jnp vs Pallas kernel (interpret) paths."""
+    rows = []
+    B, m, E, k = 64, 1024, 8, 4
+    cells = jnp.zeros((B, m), jnp.int32)
+    hi = jnp.zeros((B, E), jnp.uint32)
+    lo = jnp.tile(jnp.arange(E, dtype=jnp.uint32), (B, 1))
+
+    batch_clock = bc.BloomClock(cells, jnp.zeros((B,), jnp.int32), k)
+    tick_core = jax.jit(lambda c, h, l: bc.tick(c, h, l))
+    us = _timeit(tick_core, batch_clock, hi, lo)
+    rows.append((f"tick_core_jnp_B{B}_m{m}_E{E}", us, f"{B * E / us:.1f} ev/us"))
+
+    us = _timeit(lambda: ops.tick(cells, hi, lo, k=k))
+    rows.append((f"tick_pallas_interp_B{B}_m{m}_E{E}", us,
+                 "kernel body in python (CPU interpret)"))
+
+    a = jnp.ones((B, m), jnp.int32)
+    b = jnp.ones((B, m), jnp.int32)
+    cmp_core = jax.jit(lambda x, y: bc.compare(
+        bc.BloomClock(x, jnp.zeros((B,), jnp.int32), k),
+        bc.BloomClock(y, jnp.zeros((B,), jnp.int32), k)).a_le_b)
+    us = _timeit(cmp_core, a, b)
+    rows.append((f"compare_core_jnp_B{B}_m{m}", us, f"{B / us:.2f} cmp/us"))
+
+    us = _timeit(lambda: ops.merge_compare(a, b))
+    rows.append((f"merge_compare_pallas_interp_B{B}_m{m}", us,
+                 "fused merge+flags+sums+fp"))
+    return rows
+
+
+def bench_protocol_sim() -> list:
+    """N-node protocol accuracy vs clock size m (paper's trade-off)."""
+    rows = []
+    for m in (16, 32, 64, 128, 256):
+        t0 = time.perf_counter()
+        r = run_sim(SimConfig(n_nodes=12, n_events=600, m=m, k=3, seed=7,
+                              sample_pairs=6000))
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append((f"sim_12node_600ev_m{m}", dt / 600,
+                     f"fn={r.false_negatives} fp_rate={r.measured_fp_rate:.4f} "
+                     f"tp={r.true_positives} wire={r.bloom_wire_bytes}B"))
+    return rows
+
+
+def bench_history_refinement() -> list:
+    """§3 history-window: fp improvement from closest-predecessor search."""
+    from repro.core import history as hist
+
+    rows = []
+    m, k, W = 128, 3, 32
+    c = bc.zeros(m, k)
+    h = hist.init(W, m, k)
+    old = None
+    for i in range(60):
+        c = bc.tick(c, jnp.uint32(0), jnp.uint32(i))
+        h = hist.push(h, c)
+        if i == 10:
+            old = c
+    fp_newest = float(bc.compare(old, c).fp_a_before_b)
+    fp_best, _ = hist.best_predecessor_fp(h, old)
+    us = _timeit(lambda: hist.best_predecessor_fp(h, old))
+    rows.append((f"history_refine_W{W}_m{m}", us,
+                 f"fp_newest={fp_newest:.3e} fp_refined={float(fp_best):.3e} "
+                 f"gain={fp_newest / max(float(fp_best), 1e-30):.1e}x"))
+    return rows
+
+
+def all_benches() -> list:
+    rows = []
+    rows += bench_eq3_fp_rate()
+    rows += bench_space_vs_n()
+    rows += bench_op_throughput()
+    rows += bench_protocol_sim()
+    rows += bench_history_refinement()
+    return rows

@@ -1,0 +1,163 @@
+"""Roofline-term extraction for every dry-run cell.
+
+XLA's cost_analysis counts a ``scan``(while-loop) body ONCE, so the
+full-depth numbers from the baseline dry-run undercount layer work.  This
+bench therefore lowers each cell twice more at reduced depth (L=2, L=4,
+scan disabled) at FULL width/batch, takes the per-layer delta, and scales:
+
+    total(X) = X(L=2) + (L - 2) * (X(L=4) - X(L=2)) / 2
+
+for X in {flops, bytes_accessed, collective_bytes}.  Hardware model
+(TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+    compute_term    = flops_per_chip / 197e12
+    memory_term     = bytes_per_chip / 819e9
+    collective_term = coll_bytes_per_chip / 50e9
+
+Writes reports/roofline.csv; run via ``python -m benchmarks.run`` (fast
+cells only) or ``python -m benchmarks.bench_roofline --all``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+CSV_HEADER = ("arch,shape,mesh,flops_per_chip,bytes_per_chip,coll_bytes_per_chip,"
+              "compute_s,memory_s,collective_s,dominant,model_flops_per_chip,"
+              "useful_ratio,roofline_frac")
+
+
+def _reduced_cfg(cfg, L):
+    kw = {"n_layers": L, "scan_layers": False}
+    if cfg.is_encdec:
+        kw["n_enc_layers"] = L
+    if cfg.family == "hybrid":
+        kw["global_layers"] = ()      # homogeneous layers for the delta
+    return dataclasses.replace(cfg, **kw)
+
+
+def _extract(rec):
+    coll = rec["collectives"]
+    cbytes = sum(v for k, v in coll.items() if k != "counts")
+    return (rec["cost"]["flops"] or 0.0,
+            rec["cost"]["bytes_accessed"] or 0.0,
+            float(cbytes))
+
+
+def measure_cell(arch, shape_name, rules=None, cfg_override=None, quiet=True):
+    """Returns dict with L-scaled per-chip flops/bytes/collective bytes."""
+    from repro.configs import get_config
+    from repro.launch.dryrun import run_cell
+
+    cfg = cfg_override or get_config(arch)
+    L = cfg.n_layers
+    r2 = run_cell(arch, shape_name, rules=rules,
+                  cfg_override=_reduced_cfg(cfg, 2), quiet=quiet)
+    r4 = run_cell(arch, shape_name, rules=rules,
+                  cfg_override=_reduced_cfg(cfg, 4), quiet=quiet)
+    f2, b2, c2 = _extract(r2)
+    f4, b4, c4 = _extract(r4)
+    per_layer = ((f4 - f2) / 2, (b4 - b2) / 2, (c4 - c2) / 2)
+    tot = (f2 + (L - 2) * per_layer[0],
+           b2 + (L - 2) * per_layer[1],
+           c2 + (L - 2) * per_layer[2])
+    return {"flops": tot[0], "bytes": tot[1], "coll": tot[2],
+            "per_layer": per_layer, "L": L}
+
+
+def model_flops_per_chip(cfg, shape, chips=256):
+    """6·N·D (dense train) / 2·N·D (prefill) / 2·N_active·B (decode),
+    with N_active for MoE; divided by chips."""
+    n = cfg.n_params()
+    n_act = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_act * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_act * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_act * shape.global_batch
+    return total / chips
+
+
+def roofline_row(arch, shape_name, meas, cfg=None, chips=256):
+    from repro.configs import get_config
+    from repro.shapes import SHAPES
+
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    comp = meas["flops"] / PEAK_FLOPS
+    memt = meas["bytes"] / HBM_BW
+    coll = meas["coll"] / ICI_BW
+    dom = max(("compute", comp), ("memory", memt), ("collective", coll),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops_per_chip(cfg, shape, chips)
+    useful = mf / meas["flops"] if meas["flops"] else 0.0
+    # roofline fraction: useful-compute time over the actual bottleneck time
+    bound = max(comp, memt, coll)
+    frac = (mf / PEAK_FLOPS) / bound if bound else 0.0
+    return {
+        "arch": arch, "shape": shape_name, "mesh": f"{chips}chips",
+        "flops": meas["flops"], "bytes": meas["bytes"], "coll": meas["coll"],
+        "compute_s": comp, "memory_s": memt, "collective_s": coll,
+        "dominant": dom, "model_flops": mf, "useful_ratio": useful,
+        "roofline_frac": frac,
+    }
+
+
+def fmt_csv(row):
+    return (f'{row["arch"]},{row["shape"]},{row["mesh"]},{row["flops"]:.4e},'
+            f'{row["bytes"]:.4e},{row["coll"]:.4e},{row["compute_s"]:.4e},'
+            f'{row["memory_s"]:.4e},{row["collective_s"]:.4e},{row["dominant"]},'
+            f'{row["model_flops"]:.4e},{row["useful_ratio"]:.4f},'
+            f'{row["roofline_frac"]:.4f}')
+
+
+def main(cells=None, out="reports/roofline.csv", rules=None):
+    from repro.configs import ARCHS, get_config
+    from repro.shapes import SHAPES, runnable
+
+    if cells is None:
+        cells = [(a, s) for a in ARCHS for s in SHAPES
+                 if runnable(get_config(a).family, s)]
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    done = {}
+    if os.path.exists(out):
+        with open(out) as f:
+            for line in f.read().splitlines()[1:]:
+                if line:
+                    parts = line.split(",")
+                    done[(parts[0], parts[1])] = line
+    rows = []
+    with open(out, "w") as f:
+        f.write(CSV_HEADER + "\n")
+        for k, line in done.items():
+            f.write(line + "\n")
+        f.flush()
+        for arch, s in cells:
+            if (arch, s) in done:
+                print(f"[roofline] cached {arch} x {s}")
+                continue
+            try:
+                meas = measure_cell(arch, s, rules=rules)
+                row = roofline_row(arch, s, meas)
+                rows.append(row)
+                f.write(fmt_csv(row) + "\n")
+                f.flush()
+                print(f"[roofline] {arch:18s} {s:12s} dom={row['dominant']:10s} "
+                      f"frac={row['roofline_frac']:.3f}")
+            except Exception as e:
+                import traceback
+                traceback.print_exc()
+                print(f"[roofline] FAIL {arch} {s}: {e}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

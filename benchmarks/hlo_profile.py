@@ -1,0 +1,139 @@
+"""Dry-run 'profiler': group HLO output bytes by op kind for a cell.
+
+No wall-clock on CPU — the lowered IR is the profile.  Output-bytes by op
+kind (with while-body ops scaled by an L/2 layer factor when requested)
+localizes WHERE the roofline's memory/collective terms come from, which
+drives the §Perf hypothesis loop.
+
+Usage: PYTHONPATH=src python -m benchmarks.hlo_profile --arch grok_1_314b \\
+           --shape prefill_32k [--top 25]
+"""
+from __future__ import annotations
+
+import argparse
+import re
+from collections import defaultdict
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2,
+}
+_OP_RE = re.compile(r"=\s+(?:\([^)]*\)|\S+)\s+([a-z][\w-]*)\(")
+
+
+def op_bytes(line: str) -> int:
+    seg = line.split("=", 1)[1] if "=" in line else line
+    # take text up to the op call args to capture the result shape(s)
+    total = 0
+    head = seg[: seg.find("(")] if "(" in seg else seg
+    if seg.lstrip().startswith("("):
+        head = seg[: seg.find(")") + 1]
+    for dt, dims in _SHAPE_RE.findall(head):
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def profile_text(hlo: str, top: int = 25) -> list:
+    by_kind = defaultdict(lambda: [0, 0])
+    for line in hlo.splitlines():
+        ls = line.strip()
+        if "=" not in ls or not ls.startswith("%") and not ls.startswith("ROOT"):
+            continue
+        m = _OP_RE.search(ls)
+        if not m:
+            continue
+        kind = m.group(1)
+        if kind in ("parameter", "constant", "tuple", "get-tuple-element"):
+            continue
+        b = op_bytes(ls)
+        by_kind[kind][0] += b
+        by_kind[kind][1] += 1
+    rows = sorted(by_kind.items(), key=lambda kv: -kv[1][0])[:top]
+    return [(k, v[0], v[1]) for k, v in rows]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--moe-impl", type=str, default=None)
+    args = ap.parse_args()
+
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.launch.dryrun import run_cell  # sets XLA device flags
+    import repro.launch.dryrun as dr
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import specs as S
+    from repro.optim.adamw import OptConfig
+    from repro.runtime.clock_runtime import ClockConfig
+    from repro.sharding import DEFAULT_RULES, use_mesh_rules
+    from repro.shapes import SHAPES
+
+    cfg = get_config(args.arch)
+    kw = {"n_layers": args.layers, "scan_layers": False}
+    if cfg.is_encdec:
+        kw["n_enc_layers"] = args.layers
+    if args.moe_impl:
+        kw["moe_impl"] = args.moe_impl
+    cfg = dataclasses.replace(cfg, **kw)
+    rec_holder = {}
+
+    # reuse run_cell but grab the HLO: easiest is to re-lower here
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh()
+    rules = dict(DEFAULT_RULES)
+    opt_cfg = OptConfig(state_dtype="int8" if cfg.param_dtype == "bfloat16" else "float32")
+    clock_cfg = ClockConfig()
+    with use_mesh_rules(mesh, rules):
+        step = S.build_step(cfg, shape, opt_cfg, clock_cfg)
+        if shape.kind == "train":
+            state = S.abstract_state(cfg, opt_cfg, clock_cfg)
+            st_sh = S.state_shardings(mesh, rules, cfg, state)
+            bspecs = S.batch_specs(cfg, shape)
+            b_sh = S.batch_shardings(mesh, bspecs)
+            lowered = jax.jit(step, in_shardings=(st_sh, b_sh),
+                              out_shardings=(st_sh, None),
+                              donate_argnums=(0,)).lower(state, bspecs)
+        elif shape.kind == "prefill":
+            params = S.abstract_params_dict(cfg)
+            p_sh = S.params_shardings(mesh, rules, cfg)
+            bspecs = S.batch_specs(cfg, shape)
+            b_sh = S.batch_shardings(mesh, bspecs)
+            lowered = jax.jit(step, in_shardings=(p_sh, b_sh)).lower(params, bspecs)
+        else:
+            params = S.abstract_params_dict(cfg)
+            p_sh = S.params_shardings(mesh, rules, cfg)
+            caches = S.cache_specs(cfg, shape, long_context=(args.shape == "long_500k"))
+            c_sh = S.cache_shardings(mesh, rules, caches)
+            tok = jax.ShapeDtypeStruct((shape.global_batch,), jax.numpy.int32)
+            pos = jax.ShapeDtypeStruct((), jax.numpy.int32)
+            t_sh = S.batch_shardings(mesh, {"t": tok})["t"]
+            lowered = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh, None),
+                              out_shardings=(None, c_sh),
+                              donate_argnums=(1,)).lower(params, caches, tok, pos)
+        compiled = lowered.compile()
+        hlo = compiled.as_text()
+    print(f"# {args.arch} x {args.shape} (L={args.layers}, "
+          f"moe_impl={cfg.moe_impl if cfg.n_experts else '-'})")
+    print(f"# total flops={compiled.cost_analysis()['flops']:.3e} "
+          f"bytes={compiled.cost_analysis().get('bytes accessed', 0):.3e}")
+    print(f"{'op-kind':28s} {'GB(out)':>12s} {'count':>8s}")
+    for kind, b, n in profile_text(hlo, args.top):
+        print(f"{kind:28s} {b/1e9:12.2f} {n:8d}")
+
+
+if __name__ == "__main__":
+    main()

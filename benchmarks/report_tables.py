@@ -1,0 +1,68 @@
+"""Render EXPERIMENTS.md tables from reports/*.jsonl|csv artifacts."""
+from __future__ import annotations
+
+import json
+import os
+
+GB = 1e9
+
+
+def dryrun_table(path="reports/dryrun_baseline.jsonl") -> str:
+    recs = [json.loads(l) for l in open(path)]
+    # keep the newest record per cell
+    by_key = {}
+    for r in recs:
+        by_key[(r["arch"], r["shape"], r["mesh"])] = r
+    lines = [
+        "| arch | shape | mesh | status | compile_s | arg GB/dev | temp GB/dev | "
+        "flops/dev | ag GB | ar GB | a2a GB | cp GB |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, s, m), r in sorted(by_key.items()):
+        if r["status"] == "skip":
+            lines.append(f"| {a} | {s} | {m} | SKIP (full-attn, documented) "
+                         f"| | | | | | | | |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {a} | {s} | {m} | FAIL | | | | | | | | |")
+            continue
+        b = r["bytes_per_device"]
+        c = r["collectives"]
+        lines.append(
+            f"| {a} | {s} | {m} | ok | {r['compile_s']} "
+            f"| {b['argument']/GB:.2f} | {b['temp']/GB:.2f} "
+            f"| {r['cost']['flops']:.2e} "
+            f"| {c['all-gather']/GB:.2f} | {c['all-reduce']/GB:.2f} "
+            f"| {c['all-to-all']/GB:.2f} | {c['collective-permute']/GB:.2f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(path="reports/roofline.csv") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful (6ND/HLO) | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    with open(path) as f:
+        rows = f.read().splitlines()[1:]
+    for row in sorted(rows):
+        if not row:
+            continue
+        p = row.split(",")
+        lines.append(
+            f"| {p[0]} | {p[1]} | {float(p[6]):.3e} | {float(p[7]):.3e} "
+            f"| {float(p[8]):.3e} | **{p[9]}** | {float(p[11]):.3f} "
+            f"| {float(p[12]):.4f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run table\n")
+        print(dryrun_table())
+    if which in ("all", "roofline"):
+        print("\n### Roofline table\n")
+        print(roofline_table())

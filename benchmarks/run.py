@@ -1,0 +1,34 @@
+"""Benchmark driver: one function per paper claim/table.
+
+Prints ``name,us_per_call,derived`` CSV.  The roofline extraction (which
+re-lowers 512-device programs and takes ~30 min for all 32 cells) runs
+separately via ``python -m benchmarks.bench_roofline``; here we include
+its cached summary when reports/roofline.csv exists.
+"""
+from __future__ import annotations
+
+import os
+
+
+def main() -> None:
+    from benchmarks.bench_clock import all_benches
+
+    print("name,us_per_call,derived")
+    for name, us, derived in all_benches():
+        print(f'{name},{us:.2f},"{derived}"')
+
+    path = os.path.join(os.path.dirname(__file__), "..", "reports",
+                        "roofline.csv")
+    if os.path.exists(path):
+        with open(path) as f:
+            lines = f.read().splitlines()
+        for line in lines[1:]:
+            if not line:
+                continue
+            p = line.split(",")
+            print(f'roofline_{p[0]}_{p[1]},0.00,"dom={p[9]} '
+                  f'useful={p[11]} frac={p[12]}"')
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Render the §Perf-results table + §Roofline summary into EXPERIMENTS.md
+from reports/perf_iterations.jsonl and reports/roofline.csv."""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+
+def perf_table() -> str:
+    rows = [json.loads(l) for l in open("reports/perf_iterations.jsonl")]
+    by_cell = defaultdict(list)
+    for r in rows:
+        by_cell[r["id"].split("/")[0]].append(r)
+    out = []
+    for cell, rs in by_cell.items():
+        out.append(f"\n**{cell}**\n")
+        out.append("| iter | hypothesis (abridged) | compute_s | memory_s | "
+                   "collective_s | dominant | frac | verdict |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        prev = None
+        for r in rs:
+            if "error" in r:
+                out.append(f"| {r['id'].split('/')[1]} | {r['hypothesis'][:60]} "
+                           f"| — | — | — | — | — | ERROR |")
+                continue
+            ro = r["roofline"]
+            frac = ro["roofline_frac"]
+            if prev is None:
+                verdict = "baseline"
+            else:
+                d = (frac - prev) / max(prev, 1e-9)
+                verdict = ("**confirmed** (+{:.0%})".format(d) if d > 0.05
+                           else "refuted/neutral ({:+.1%})".format(d))
+            prev = frac
+            hyp = r["hypothesis"].split(":")[0][:70]
+            out.append(
+                f"| {r['id'].split('/')[1]} | {hyp} | {ro['compute_s']:.2f} "
+                f"| {ro['memory_s']:.2f} | {ro['collective_s']:.2f} "
+                f"| {ro['dominant']} | **{frac:.3f}** | {verdict} |")
+    return "\n".join(out)
+
+
+def summary() -> str:
+    rows = [json.loads(l) for l in open("reports/perf_iterations.jsonl")
+            if "error" not in l]
+    by_cell = defaultdict(list)
+    for r in rows:
+        by_cell[r["id"].split("/")[0]].append(r["roofline"]["roofline_frac"])
+    lines = ["\n**Paper-faithful baseline vs beyond-paper optimized (roofline "
+             "fraction):**\n",
+             "| cell | baseline (V0) | optimized (best) | gain |",
+             "|---|---|---|---|"]
+    for cell, fr in by_cell.items():
+        lines.append(f"| {cell} | {fr[0]:.3f} | {max(fr):.3f} "
+                     f"| **{max(fr)/fr[0]:.1f}×** |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    text = open("EXPERIMENTS.md").read()
+    block = summary() + "\n" + perf_table()
+    text = re.sub(r"<!-- PERF_TABLE -->.*?(?=\n### |\Z)",
+                  "<!-- PERF_TABLE -->\n" + block + "\n\n",
+                  text, flags=re.S)
+    open("EXPERIMENTS.md", "w").write(text)
+    print(block)

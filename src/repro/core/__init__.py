@@ -1,0 +1,10 @@
+"""The paper's primary contribution: the Bloom Clock and its ecosystem.
+
+- ``clock``        BloomClock pytree + tick/merge/compare/fp_rate/compress
+- ``vector_clock`` exact O(N) baseline the paper compares against
+- ``hashing``      event-id mixing + double-hashed bloom indices
+- ``history``      §3 moving-window predecessor refinement
+- ``sim``          N-node protocol simulator with ground-truth scoring
+"""
+from repro.core import clock, hashing, history, sim, vector_clock  # noqa: F401
+from repro.core.clock import BloomClock, compare, fp_rate, merge, tick, zeros  # noqa: F401

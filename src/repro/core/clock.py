@@ -1,0 +1,236 @@
+"""The Bloom Clock (Ramabaja, 2019) as a composable JAX module.
+
+A clock is a counting bloom filter of ``m`` int32 cells plus a scalar
+``base`` implementing the paper's §4 compression: the logical cell value is
+``base + cells[i]``.  All operations are pure functions over pytrees and are
+jit/vmap/pjit compatible; batched clocks simply carry leading batch dims.
+
+Paper-op mapping:
+  tick        §3 step 2  (hash event k times, increment cells)
+  merge       §3 step 3  (element-wise max)
+  compare     §3          (cell-wise dominance; exact concurrency detection)
+  fp_rate     §3 Eq. 3    ((1-(1-1/m)^{ΣB})^{ΣA}), log-stable
+  compress    §4          ((c)[residuals] base-offset form)
+
+The hot paths (tick / fused merge+compare) have Pallas TPU kernels in
+``repro.kernels``; this module is the reference implementation and the
+API the rest of the framework uses (the kernels are drop-in via
+``repro.kernels.ops``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import bloom_indices
+
+__all__ = [
+    "BloomClock",
+    "zeros",
+    "tick",
+    "merge",
+    "compare",
+    "Ordering",
+    "fp_rate",
+    "compress",
+    "decompress",
+    "clock_sum",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BloomClock:
+    """Counting-bloom-filter logical clock.
+
+    cells: int32[..., m] residual counters.
+    base:  int32[...]    shared offset (paper §4 compression); logical
+                         value of cell i is base + cells[i].
+    k:     static number of hash probes per event.
+    """
+
+    cells: jax.Array
+    base: jax.Array
+    k: int = 4
+
+    # -- pytree protocol (k is static) --
+    def tree_flatten(self):
+        return (self.cells, self.base), self.k
+
+    @classmethod
+    def tree_unflatten(cls, k, leaves):
+        return cls(leaves[0], leaves[1], k)
+
+    @property
+    def m(self) -> int:
+        return self.cells.shape[-1]
+
+    @property
+    def batch_shape(self):
+        return self.cells.shape[:-1]
+
+    def logical_cells(self) -> jax.Array:
+        return self.cells + self.base[..., None].astype(self.cells.dtype)
+
+    def sum(self) -> jax.Array:
+        return clock_sum(self)
+
+
+def zeros(m: int, k: int = 4, batch_shape: tuple = (), dtype=jnp.int32) -> BloomClock:
+    return BloomClock(
+        cells=jnp.zeros(batch_shape + (m,), dtype),
+        base=jnp.zeros(batch_shape, dtype),
+        k=k,
+    )
+
+
+def clock_sum(c: BloomClock) -> jax.Array:
+    """Total number of increments recorded (Σ cells + m·base), as float32.
+
+    float32 because sums reach k × events and feed Eq. 3 exponents.
+    """
+    s = jnp.sum(c.cells, axis=-1).astype(jnp.float32)
+    return s + c.base.astype(jnp.float32) * c.m
+
+
+def tick(c: BloomClock, event_hi, event_lo) -> BloomClock:
+    """Record event(s): increment the k hashed cells per event.
+
+    event_hi/lo: uint32 scalars or arrays whose shape is either
+    ``c.batch_shape`` (one event per clock) or ``c.batch_shape + (E,)``
+    (E events per clock).
+    """
+    event_hi = jnp.asarray(event_hi, jnp.uint32)
+    event_lo = jnp.asarray(event_lo, jnp.uint32)
+    idx = bloom_indices(event_hi, event_lo, c.k, c.m)  # [..., (E,) , k]
+    # flatten any trailing event axes into one probe axis
+    probe = idx.reshape(c.batch_shape + (-1,))
+    one_hot = jax.nn.one_hot(probe, c.m, dtype=c.cells.dtype)  # [..., P, m]
+    inc = jnp.sum(one_hot, axis=-2)
+    return dataclasses.replace(c, cells=c.cells + inc)
+
+
+def merge(a: BloomClock, b: BloomClock) -> BloomClock:
+    """§3 step 3: element-wise max of logical cells.
+
+    Keeps the max base and re-normalizes residuals so compression survives
+    merging.
+    """
+    la = a.logical_cells()
+    lb = b.logical_cells()
+    mx = jnp.maximum(la, lb)
+    base = jnp.maximum(a.base, b.base)
+    return BloomClock(cells=mx - base[..., None].astype(mx.dtype), base=base, k=a.k)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ordering:
+    """Result of comparing two clocks A, B.
+
+    a_le_b / b_le_a: bool[...] cell-wise dominance each way.
+    concurrent:      bool[...] neither dominates -> *exact* concurrency
+                     (no false negatives, paper §3).
+    equal:           bool[...] identical logical cells.
+    fp_a_before_b:   float32[...] Eq. 3 false-positive rate of the claim
+                     "A happened-before B" (valid where a_le_b).
+    fp_b_before_a:   float32[...] symmetric.
+    """
+
+    a_le_b: jax.Array
+    b_le_a: jax.Array
+    concurrent: jax.Array
+    equal: jax.Array
+    fp_a_before_b: jax.Array
+    fp_b_before_a: jax.Array
+
+
+def fp_rate(sum_a, sum_b, m: int) -> jax.Array:
+    """Paper Eq. 3: (1 - (1 - 1/m)^{ΣB})^{ΣA}, numerically stable.
+
+    Valid under Eq. 4 (ΣB ≥ ΣA); callers pass sums either way and pick the
+    branch via the dominance predicate.  Computed as
+        exp(ΣA * log(-expm1(ΣB * log1p(-1/m))))
+    so ΣB ~ 1e9 doesn't underflow pow.
+    """
+    sum_a = jnp.asarray(sum_a, jnp.float32)
+    sum_b = jnp.asarray(sum_b, jnp.float32)
+    log_q = jnp.log1p(-1.0 / m)          # log(1 - 1/m) < 0
+    inner = -jnp.expm1(sum_b * log_q)    # 1 - (1-1/m)^ΣB  in (0, 1)
+    inner = jnp.clip(inner, 1e-30, 1.0)
+    return jnp.exp(sum_a * jnp.log(inner))
+
+
+def compare(a: BloomClock, b: BloomClock) -> Ordering:
+    """Cell-wise partial-order comparison + Eq. 3 confidence, one pass."""
+    la = a.logical_cells()
+    lb = b.logical_cells()
+    a_le_b = jnp.all(la <= lb, axis=-1)
+    b_le_a = jnp.all(lb <= la, axis=-1)
+    equal = jnp.logical_and(a_le_b, b_le_a)
+    concurrent = jnp.logical_not(jnp.logical_or(a_le_b, b_le_a))
+    sa = clock_sum(a)
+    sb = clock_sum(b)
+    return Ordering(
+        a_le_b=a_le_b,
+        b_le_a=b_le_a,
+        concurrent=concurrent,
+        equal=equal,
+        fp_a_before_b=fp_rate(sa, sb, a.m),
+        fp_b_before_a=fp_rate(sb, sa, a.m),
+    )
+
+
+def compress(c: BloomClock) -> BloomClock:
+    """§4: lift min(cells) into the base so residuals stay small.
+
+    [4,3,3,5,7,...] -> base+=3, cells=[1,0,0,2,4,...].  Happens naturally
+    every ~m/k events; callers may apply it after every merge.
+    """
+    mn = jnp.min(c.cells, axis=-1)
+    return BloomClock(
+        cells=c.cells - mn[..., None],
+        base=c.base + mn.astype(c.base.dtype),
+        k=c.k,
+    )
+
+
+def decompress(c: BloomClock) -> BloomClock:
+    """Inverse of compress (materialize logical cells, zero base)."""
+    return BloomClock(cells=c.logical_cells(), base=jnp.zeros_like(c.base), k=c.k)
+
+
+# ---------------------------------------------------------------------------
+# convenience jitted entry points used across the runtime
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("threshold",))
+def happened_before(a: BloomClock, b: BloomClock, threshold: float = 0.01):
+    """True where "A -> B" holds with fp rate below ``threshold``.
+
+    This is the decision rule the runtime uses (checkpoint lineage, async
+    merge guards): dominance AND confidence.
+    """
+    o = compare(a, b)
+    return jnp.logical_and(o.a_le_b, o.fp_a_before_b < threshold)
+
+
+def comparability_matrix(clocks: BloomClock) -> dict[str, jax.Array]:
+    """All-pairs comparison for a batch of clocks [n, m] -> n x n matrices.
+
+    Used by the simulator and by fleet-level debugging dashboards.
+    """
+    n = clocks.cells.shape[0]
+    ai = jax.tree.map(lambda x: x[:, None] if x.ndim == 1 else x[:, None, :], clocks)
+    bi = jax.tree.map(lambda x: x[None, :] if x.ndim == 1 else x[None, :, :], clocks)
+    ai = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape[1:]), ai)
+    bi = jax.tree.map(lambda x: jnp.broadcast_to(x, (n, n) + x.shape[2:]), bi)
+    o = compare(ai, bi)
+    return {
+        "a_le_b": o.a_le_b,
+        "concurrent": o.concurrent,
+        "fp": o.fp_a_before_b,
+    }

@@ -1,0 +1,85 @@
+"""Timestamp history window (paper §3).
+
+"The node whose bloom filter has larger values, can go through its history
+of timestamps, pick the timestamp with the smallest difference to that of
+the other node's timestamp, and verify with high confidence the order."
+
+A ``History`` is a fixed-capacity ring of past clocks (a jnp array stack),
+so it jits cleanly and its memory is bounded — this is the paper's "moving
+window in which the partial order of events can be inferred with high
+confidence".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clock as bc
+
+__all__ = ["History", "init", "push", "best_predecessor_fp"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class History:
+    """cells: int32[W, m] logical cells of the last W timestamps.
+    sums:  float32[W] their increment counts.
+    count: int32 number of valid entries (<= W).
+    """
+
+    cells: jax.Array
+    sums: jax.Array
+    count: jax.Array
+    k: int = 4
+
+    def tree_flatten(self):
+        return (self.cells, self.sums, self.count), self.k
+
+    @classmethod
+    def tree_unflatten(cls, k, leaves):
+        return cls(*leaves, k=k)
+
+    @property
+    def window(self) -> int:
+        return self.cells.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.cells.shape[-1]
+
+
+def init(window: int, m: int, k: int = 4) -> History:
+    return History(
+        cells=jnp.zeros((window, m), jnp.int32),
+        sums=jnp.zeros((window,), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
+        k=k,
+    )
+
+
+def push(h: History, c: bc.BloomClock) -> History:
+    """Append a timestamp, evicting the oldest when full (ring shift)."""
+    cells = jnp.roll(h.cells, -1, axis=0).at[-1].set(c.logical_cells())
+    sums = jnp.roll(h.sums, -1).at[-1].set(bc.clock_sum(c))
+    return History(cells=cells, sums=sums, count=jnp.minimum(h.count + 1, h.window), k=h.k)
+
+
+@jax.jit
+def best_predecessor_fp(h: History, other: bc.BloomClock):
+    """§3 refinement: over all stored timestamps t that dominate ``other``,
+    return the smallest Eq.-3 fp rate (i.e. compare against the *closest*
+    dominating timestamp instead of the newest one).
+
+    Returns (fp, index); fp = +inf when no stored timestamp dominates.
+    """
+    lo = other.logical_cells()
+    so = bc.clock_sum(other)
+    dominates = jnp.all(h.cells >= lo[None, :], axis=-1)  # [W]
+    valid = jnp.arange(h.window) >= (h.window - h.count)
+    ok = jnp.logical_and(dominates, valid)
+    fps = bc.fp_rate(so, h.sums, h.m)  # fp of "other -> stored_t" per entry
+    fps = jnp.where(ok, fps, jnp.inf)
+    idx = jnp.argmin(fps)
+    return fps[idx], idx

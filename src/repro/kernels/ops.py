@@ -1,0 +1,112 @@
+"""Public jit'd wrappers around the bloom-clock Pallas kernels.
+
+Handles: probe-index precomputation (hashing), padding m to the lane
+boundary and B to the batch tile, platform dispatch (interpret=True off-TPU
+so the SAME kernel body is exercised on CPU), and un-padding.
+
+The rest of the framework calls these; ``repro.core.clock`` stays the
+algorithmic reference.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import bloom_indices
+from repro.kernels.bloom_compare import bloom_merge_compare_pallas
+from repro.kernels.bloom_tick import bloom_tick_pallas
+
+__all__ = ["tick", "merge_compare", "pad_to", "pick_block"]
+
+LANE = 128  # TPU lane width
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pad_to(x: jax.Array, mult: int, axis: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def pick_block(padded: int, want: int, lane: int = LANE) -> int:
+    """Largest lane-multiple block <= want that divides ``padded``."""
+    q = padded // lane
+    best = 1
+    for d in range(1, q + 1):
+        if q % d == 0 and d * lane <= max(want, lane):
+            best = d
+    return best * lane
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bb", "bm", "interpret"))
+def tick(
+    cells: jax.Array,        # [B, m] int32
+    ev_hi: jax.Array,        # [B, E] uint32
+    ev_lo: jax.Array,        # [B, E] uint32
+    *,
+    k: int = 4,
+    bb: int = 8,
+    bm: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched bloom tick: E events per clock, k probes each."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, m = cells.shape
+    idx = bloom_indices(ev_hi, ev_lo, k, m)          # [B, E, k] uint32
+    probes = idx.reshape(B, -1).astype(jnp.int32)    # [B, P], all < m
+    cells_p = pad_to(cells, LANE, axis=1)            # padded cols never hit
+    mp = cells_p.shape[1]
+    bm_eff = pick_block(mp, bm)
+    bb_eff = min(bb, B) if B % min(bb, B) == 0 else math.gcd(B, bb)
+    cells_p = pad_to(cells_p, bb_eff, axis=0)
+    probes_p = pad_to(probes, bb_eff, axis=0)        # pad rows: probe 0 hits
+    out = bloom_tick_pallas(cells_p, probes_p, bb=bb_eff, bm=bm_eff, interpret=interpret)
+    return out[:B, :m]                               # padded-row incs sliced off
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bm", "interpret"))
+def merge_compare(
+    a: jax.Array,            # [B, m] int32 logical cells
+    b: jax.Array,
+    *,
+    bb: int = 8,
+    bm: int = 512,
+    interpret: bool | None = None,
+):
+    """Fused receive-path op. Returns dict with merged cells, dominance
+    flags, sums and Eq.3 fp rates (see bloom_compare.py)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, m = a.shape
+    a_p = pad_to(a, LANE, axis=1)
+    b_p = pad_to(b, LANE, axis=1)
+    mp = a_p.shape[1]
+    bm_eff = pick_block(mp, bm)
+    bb_eff = min(bb, B) if B % min(bb, B) == 0 else math.gcd(B, bb)
+    a_p = pad_to(a_p, bb_eff, axis=0)
+    b_p = pad_to(b_p, bb_eff, axis=0)
+    # zero padding perturbs neither dominance (0<=0) nor sums; Eq. 3 must
+    # use the TRUE m, passed statically to the kernel.
+    merged, flags, sums, fp = bloom_merge_compare_pallas(
+        a_p, b_p, bb=bb_eff, bm=bm_eff, m_true=m, interpret=interpret
+    )
+    return {
+        "merged": merged[:B, :m],
+        "a_le_b": flags[:B, 0].astype(bool),
+        "b_le_a": flags[:B, 1].astype(bool),
+        "sum_a": sums[:B, 0],
+        "sum_b": sums[:B, 1],
+        "fp_a_before_b": fp[:B, 0],
+        "fp_b_before_a": fp[:B, 1],
+    }

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the bloom-clock kernels (ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bloom_tick_ref", "bloom_merge_compare_ref"]
+
+
+def bloom_tick_ref(cells: jax.Array, probes: jax.Array) -> jax.Array:
+    """cells [B, m] int32, probes [B, P] int32 -> incremented cells.
+
+    Straightforward one-hot formulation (what the kernel must match).
+    """
+    m = cells.shape[-1]
+    one_hot = jax.nn.one_hot(probes, m, dtype=cells.dtype)  # [B, P, m]
+    return cells + jnp.sum(one_hot, axis=-2)
+
+
+def bloom_merge_compare_ref(a: jax.Array, b: jax.Array):
+    """Returns (merged, flags[B,2] int32, sums[B,2] f32, fp[B,2] f32).
+
+    flags[:, 0] = all(a<=b), flags[:, 1] = all(a>=b)
+    sums[:, 0] = ΣA, sums[:, 1] = ΣB
+    fp[:, 0]   = Eq.3 fp of "A -> B", fp[:, 1] = "B -> A"
+    """
+    m = a.shape[-1]
+    merged = jnp.maximum(a, b)
+    le = jnp.all(a <= b, axis=-1)
+    ge = jnp.all(a >= b, axis=-1)
+    sa = jnp.sum(a, axis=-1).astype(jnp.float32)
+    sb = jnp.sum(b, axis=-1).astype(jnp.float32)
+    log_q = jnp.log1p(-1.0 / m)
+    inner_b = jnp.clip(-jnp.expm1(sb * log_q), 1e-30, 1.0)
+    inner_a = jnp.clip(-jnp.expm1(sa * log_q), 1e-30, 1.0)
+    fp_ab = jnp.exp(sa * jnp.log(inner_b))
+    fp_ba = jnp.exp(sb * jnp.log(inner_a))
+    flags = jnp.stack([le, ge], axis=-1).astype(jnp.int32)
+    sums = jnp.stack([sa, sb], axis=-1)
+    fp = jnp.stack([fp_ab, fp_ba], axis=-1)
+    return merged, flags, sums, fp

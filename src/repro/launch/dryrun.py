@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import (jax locks device count on first init).
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  - build the step function (train / prefill / serve per the shape kind),
+  - ShapeDtypeStruct inputs (no allocation), shardings from the logical
+    rule table,
+  - ``jax.jit(...).lower(...)`` then ``.compile()`` on the production mesh
+    (16x16 single-pod; 2x16x16 multi-pod),
+  - record ``memory_analysis()`` (fits?), ``cost_analysis()`` (FLOPs /
+    bytes), and the collective-bytes tally parsed from the HLO (not in
+    cost_analysis) -> feeds EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1_5_0_5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out reports/dryrun]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as S
+from repro.models.params import param_table
+from repro.optim.adamw import OptConfig
+from repro.runtime.clock_runtime import ClockConfig
+from repro.sharding import DEFAULT_RULES, make_rules, use_mesh_rules
+from repro.shapes import SHAPES, runnable
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing (collective bytes are NOT in cost_analysis)
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2, "f8e4m3": 1,
+    "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _op_output_bytes(line: str) -> int:
+    """Bytes of the op's output (incl. tuple elements), from the HLO line."""
+    lhs = line.split("=", 1)[0] if "=" in line else line
+    # shapes appear right after '=': e.g.  %x = (bf16[4,8]{...}, ...) op(...)
+    rhs = line.split("=", 1)[1] if "=" in line else line
+    head = rhs.split("(", 2)[0] + (rhs.split("(", 2)[1] if rhs.startswith(" (") else "")
+    # simpler: scan shape tokens in the segment before the op name
+    seg = rhs[: rhs.find(")") + 1] if rhs.lstrip().startswith("(") else rhs.split(" ", 3)[:3]
+    seg = seg if isinstance(seg, str) else " ".join(seg)
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(seg):
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * nb
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind over the HLO module text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        for kind in _COLLECTIVES:
+            # match op name after '=', e.g. "= bf16[...] all-gather(" — avoid
+            # matching "all-gather-start"/"-done" twice (count -start only)
+            if f" {kind}(" in ls or f" {kind}-start(" in ls:
+                out[kind] += _op_output_bytes(ls)
+                counts[kind] += 1
+                break
+    out["counts"] = counts
+    return out
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             rules: dict | None = None, opt_override: dict | None = None,
+             cfg_override=None, quiet: bool = False) -> dict:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind}
+    if not runnable(cfg.family, shape_name):
+        rec["status"] = "skip"
+        rec["reason"] = "full-attention arch; long_500k needs sub-quadratic path"
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or dict(DEFAULT_RULES)
+    opt_cfg = OptConfig(state_dtype="int8" if cfg.param_dtype == "bfloat16"
+                        else "float32", **(opt_override or {}))
+    clock_cfg = ClockConfig()
+
+    with use_mesh_rules(mesh, rules):
+        step = S.build_step(cfg, shape, opt_cfg, clock_cfg)
+        if shape.kind == "train":
+            state = S.abstract_state(cfg, opt_cfg, clock_cfg)
+            st_sh = S.state_shardings(mesh, rules, cfg, state)
+            bspecs = S.batch_specs(cfg, shape)
+            b_sh = S.batch_shardings(mesh, bspecs)
+            jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
+                             out_shardings=(st_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state, bspecs)
+        elif shape.kind == "prefill":
+            params = S.abstract_params_dict(cfg)
+            p_sh = S.params_shardings(mesh, rules, cfg)
+            bspecs = S.batch_specs(cfg, shape)
+            b_sh = S.batch_shardings(mesh, bspecs)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params, bspecs)
+        else:  # decode
+            params = S.abstract_params_dict(cfg)
+            p_sh = S.params_shardings(mesh, rules, cfg)
+            caches = S.cache_specs(cfg, shape, long_context=(shape_name == "long_500k"))
+            c_sh = S.cache_shardings(mesh, rules, caches)
+            tok = jax.ShapeDtypeStruct((shape.global_batch,), jax.numpy.int32)
+            pos = jax.ShapeDtypeStruct((), jax.numpy.int32)
+            t_sh = S.batch_shardings(mesh, {"t": tok})["t"]
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh, None),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params, caches, tok, pos)
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        rec["bytes_per_device"] = {
+            "argument": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "peak": getattr(mem, "peak_memory_in_bytes", None),
+            "generated_code": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+        rec["cost"] = {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        }
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        rec["status"] = "ok"
+        if not quiet:
+            print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: OK "
+                  f"(lower {rec['lower_s']}s compile {rec['compile_s']}s, "
+                  f"flops={rec['cost']['flops']:.3e})")
+            print("  memory:", rec["bytes_per_device"])
+            print("  collectives:", {k: v for k, v in rec["collectives"].items()
+                                     if k != "counts"})
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=str, default="reports/dryrun.jsonl")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skip"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+
+    n_fail = 0
+    with open(args.out, "a") as f:
+        for a, s, mp in cells:
+            key = (a, s, "2x16x16" if mp else "16x16")
+            if key in done:
+                print(f"[dryrun] {key}: cached, skipping")
+                continue
+            try:
+                rec = run_cell(a, s, multi_pod=mp)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"arch": a, "shape": s,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                n_fail += 1
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+    print(f"[dryrun] finished, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serving driver: batched prefill + decode with clock-stamped sessions.
+
+Example (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1_5_0_5b --smoke \\
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.models.params import init_params
+from repro.runtime.clock_runtime import ClockConfig
+from repro.serving.engine import ServeConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="qwen1_5_0_5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    engine = ServingEngine(
+        params, cfg,
+        ServeConfig(max_batch=args.batch,
+                    max_seq=args.prompt_len + args.gen + 8,
+                    temperature=args.temperature, seed=args.seed),
+        ClockConfig())
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    t0 = time.time()
+    session = engine.admit(prompts)
+    t1 = time.time()
+    out = engine.generate(session, args.gen)
+    t2 = time.time()
+    print(f"[serve] prefill {args.batch}x{args.prompt_len} in {t1-t0:.2f}s; "
+          f"decode {args.gen} toks in {t2-t1:.2f}s "
+          f"({args.batch*args.gen/(t2-t1):.1f} tok/s)")
+    print(f"[serve] sample outputs: {out[:, :8].tolist()}")
+    print(f"[serve] engine clock sum: {float(engine.clock.clock.sum()):.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,214 @@
+"""Dry-run plumbing: abstract inputs, state shardings, step functions.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the step that cell lowers (weak-type-correct, shardable, no
+device allocation), and ``build_step`` returns the corresponding jittable
+function:
+
+  train_4k    -> train_step(state, batch)
+  prefill_32k -> prefill_step(params, batch)
+  decode_32k / long_500k -> serve_step(params, caches, token, pos)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.params import abstract_params, param_table
+from repro.optim.adamw import OptConfig, init_opt_state
+from repro.runtime.clock_runtime import ClockConfig
+from repro.runtime.training import TrainState, init_train_state, make_train_step
+from repro.sharding import logical_to_pspec, use_mesh_rules
+from repro.shapes import Shape
+
+__all__ = ["abstract_state", "state_shardings", "batch_specs",
+           "batch_shardings", "build_step", "cache_specs", "cache_shardings"]
+
+
+# --------------------------------------------------------------------------
+# abstract state
+# --------------------------------------------------------------------------
+
+def abstract_state(cfg: ModelConfig, opt_cfg: OptConfig,
+                   clock_cfg: ClockConfig) -> TrainState:
+    def init():
+        return init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg, clock_cfg)
+
+    return jax.eval_shape(init)
+
+
+def abstract_params_dict(cfg: ModelConfig) -> dict:
+    return abstract_params(cfg)
+
+
+def params_shardings(mesh: Mesh, rules: dict, cfg: ModelConfig) -> dict:
+    table = param_table(cfg)
+    return {
+        path: NamedSharding(mesh, logical_to_pspec(mesh, rules, info.axes, info.shape))
+        for path, info in table.items()
+    }
+
+
+def _dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def state_shardings(mesh: Mesh, rules: dict, cfg: ModelConfig,
+                    abstract: TrainState) -> TrainState:
+    """Mirror the param table's logical axes onto every state leaf.
+
+    Optimizer moments (incl. int8 Moment codes/scales) reuse their param's
+    axes — divisibility fallback handles the blocked scale dims.
+    """
+    table = param_table(cfg)
+
+    def spec_for(path_key: str, leaf) -> NamedSharding:
+        axes = None
+        info = table.get(path_key)
+        if info is not None and len(info.axes) == leaf.ndim:
+            axes = info.axes
+        if axes is None:
+            axes = (None,) * leaf.ndim
+        return NamedSharding(mesh, logical_to_pspec(mesh, rules, axes, leaf.shape))
+
+    def map_dict(d):
+        out = {}
+        for k, v in d.items():
+            if hasattr(v, "codes"):  # Moment
+                out[k] = type(v)(codes=spec_for(k, v.codes),
+                                 scale=spec_for(k, v.scale), d=v.d)
+            else:
+                out[k] = spec_for(k, v)
+        return out
+
+    repl = NamedSharding(mesh, P())
+    return TrainState(
+        params=map_dict(abstract.params),
+        opt={
+            "m": map_dict(abstract.opt["m"]),
+            "v": map_dict(abstract.opt["v"]),
+            "step": repl,
+        },
+        clock_cells=repl,
+        step=repl,
+    )
+
+
+# --------------------------------------------------------------------------
+# batch inputs
+# --------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    toks = S - cfg.n_prefix if cfg.n_prefix else S
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, toks), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, toks), jnp.int32),
+        "ev_hi": jax.ShapeDtypeStruct((), jnp.uint32),
+        "ev_lo": jax.ShapeDtypeStruct((), jnp.uint32),
+    }
+    if cfg.n_prefix:
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_prefix, cfg.d_model), cfg.compute_dtype)
+    if cfg.is_encdec:
+        specs["enc_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_seq, cfg.d_model), cfg.compute_dtype)
+    return specs
+
+
+def batch_shardings(mesh: Mesh, specs: dict) -> dict:
+    dp = _dp_axes(mesh)
+    out = {}
+    for k, v in specs.items():
+        if v.ndim == 0:
+            out[k] = NamedSharding(mesh, P())
+            continue
+        B = v.shape[0]
+        ext = 1
+        for a in dp:
+            ext *= mesh.shape[a]
+        lead = dp if B % ext == 0 else None
+        out[k] = NamedSharding(mesh, P(lead, *([None] * (v.ndim - 1))))
+    return out
+
+
+# --------------------------------------------------------------------------
+# decode caches
+# --------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, shape: Shape, long_context: bool = False):
+    """Abstract decode caches mirroring init_decode_caches."""
+    def init():
+        return T.init_decode_caches(cfg, shape.global_batch, shape.seq_len,
+                                    long_context=long_context)
+
+    return jax.eval_shape(init)
+
+
+_CACHE_AXES = {
+    # leaf-name suffix -> logical axes (leading "layers" implicit)
+    "k": ("layers", "act_batch", "act_seq_cache", "act_kv_cache", None),
+    "v": ("layers", "act_batch", "act_seq_cache", "act_kv_cache", None),
+    "ckv": ("layers", "act_batch", "act_seq_cache", None),
+    "krope": ("layers", "act_batch", "act_seq_cache", None),
+    "conv": ("layers", "act_batch", None, "act_mlp"),
+    "state": ("layers", "act_batch", "act_ssm_heads", None, None),
+    # cross-attention cache (enc-dec): enc_seq (1500) rarely divides the
+    # model axis -> rely on batch sharding
+    "cross": ("layers", "act_batch", "act_seq_cache", "act_kv_cache", None),
+}
+
+
+def cache_shardings(mesh: Mesh, rules: dict, caches) -> dict:
+    rules = dict(rules)
+    rules.setdefault("act_seq_cache", None)
+    rules.setdefault("act_ssm_heads", "model")
+
+    def spec(path, leaf):
+        name = None
+        for p in reversed(path):
+            key = str(getattr(p, "name", getattr(p, "key", "")))
+            if key in _CACHE_AXES:
+                name = key
+                break
+        if name is None or len(_CACHE_AXES[name]) != leaf.ndim:
+            return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+        return NamedSharding(
+            mesh, logical_to_pspec(mesh, rules, _CACHE_AXES[name], leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+def build_step(cfg: ModelConfig, shape: Shape, opt_cfg: OptConfig = None,
+               clock_cfg: ClockConfig = None) -> Callable:
+    opt_cfg = opt_cfg or OptConfig()
+    clock_cfg = clock_cfg or ClockConfig()
+
+    if shape.kind == "train":
+        return make_train_step(cfg, opt_cfg, clock_cfg)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, caches = T.prefill(
+                params, cfg, batch["tokens"],
+                prefix_embeds=batch.get("prefix_embeds"),
+                enc_frames=batch.get("enc_frames"),
+                buf_len=batch["tokens"].shape[1] + (cfg.n_prefix or 0))
+            return logits, caches
+
+        return prefill_step
+
+    def serve_step(params, caches, token, pos):
+        return T.decode_step(params, cfg, caches, token, pos)
+
+    return serve_step

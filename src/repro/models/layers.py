@@ -1,0 +1,93 @@
+"""Shared primitive layers: norms, RoPE, MLPs, embeddings.
+
+Pure functions over flat param dicts (path -> array).  ``sub(params, p)``
+narrows to a prefix so blocks compose: attention reads "wq", the layer
+passes ``sub(params, "attn")``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["sub", "norm", "rope", "mlp", "embed_tokens"]
+
+
+def sub(params: dict, prefix: str) -> dict:
+    pre = prefix + "/"
+    return {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}
+
+
+def norm(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """RMSNorm or LayerNorm in fp32, cast back to compute dtype."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    scale = params["scale"].astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + 1e-5) * scale + params["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + 1e-6) * scale
+    return out.astype(dt)
+
+
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions [...,] -> (cos, sin) of shape [..., dim//2]."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig, dim: int | None = None) -> jax.Array:
+    """Rotary embedding on the last dim (partial when cfg.rope_pct < 1).
+
+    x: [..., S, H, Dh]; positions: [S] or [..., S] absolute positions.
+    Pairs are (even, odd) interleaved — GPT-NeoX "half-split" layout.
+    """
+    Dh = x.shape[-1]
+    rot = dim if dim is not None else int(Dh * cfg.rope_pct)
+    rot = max(2, (rot // 2) * 2)
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    cos, sin = _rope_angles(positions, rot, cfg.rope_theta)  # [..., S, rot/2]
+    # broadcast over heads: positions [..., S] -> [..., S, 1, rot/2]
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x_rot, 2, axis=-1)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([r1, r2, x_pass], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dt = cfg.compute_dtype
+    if cfg.act == "silu_glu":
+        g = x @ params["w_gate"].astype(dt)
+        u = x @ params["w_up"].astype(dt)
+        return (jax.nn.silu(g) * u) @ params["w_down"].astype(dt)
+    h = x @ params["w_in"].astype(dt) + params["b_in"].astype(dt)
+    h = jax.nn.gelu(h)
+    return h @ params["w_out"].astype(dt) + params["b_out"].astype(dt)
+
+
+def embed_tokens(params: dict, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    """Token ids -> embeddings via one-hot matmul (TPU-friendly gather)."""
+    table = params["embed/tokens"].astype(cfg.compute_dtype)
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed/tokens"].astype(cfg.compute_dtype).T
+    else:
+        w = params["lm_head"].astype(cfg.compute_dtype)
+    logits = x @ w
+    if cfg.logit_cap > 0:
+        logits = cfg.logit_cap * jnp.tanh(logits / cfg.logit_cap)
+    return logits

@@ -1,0 +1,134 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with absorbed-matmul decode.
+
+Train/prefill: decompress c_kv -> per-head K_nope/V and run standard GQA
+math (kv heads == q heads).  Decode: the cache holds only the compressed
+latent (kv_lora + shared rope key = 576 dims/token for the 236B config),
+and W_uk / W_uv are *absorbed* into the query/output projections so scores
+are taken directly against the latent — the memory win that makes MLA.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rope
+from repro.models.attention import attention_core
+
+__all__ = ["mla_block", "MLACache", "init_mla_cache"]
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("ckv", "krope", "length", "pos"), meta_fields=())
+@dataclasses.dataclass
+class MLACache:
+    """ckv: [B, S_buf, kv_lora]; krope: [B, S_buf, qk_rope_dim] (rope applied)."""
+
+    ckv: jax.Array
+    krope: jax.Array
+    length: jax.Array
+    pos: jax.Array
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, buf_len: int) -> MLACache:
+    dt = cfg.compute_dtype
+    return MLACache(
+        ckv=jnp.zeros((batch, buf_len, cfg.kv_lora_rank), dt),
+        krope=jnp.zeros((batch, buf_len, cfg.qk_rope_dim), dt),
+        length=jnp.zeros((), jnp.int32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    out = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _project_q(params, cfg: ModelConfig, x, positions):
+    dt = cfg.compute_dtype
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = _rms(x @ params["w_dq"].astype(dt), params["q_norm"])
+    q = (cq @ params["w_uq"].astype(dt)).reshape(B, S, H, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = rope(q_rope, positions, cfg, dim=cfg.qk_rope_dim)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, cfg: ModelConfig, x, positions):
+    dt = cfg.compute_dtype
+    dkv = x @ params["w_dkv"].astype(dt)
+    ckv, k_rope = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+    ckv = _rms(ckv, params["kv_norm"])
+    # shared (single-head) rope key
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg, dim=cfg.qk_rope_dim)[:, :, 0, :]
+    return ckv, k_rope
+
+
+def mla_block(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    cache: MLACache | None = None,
+):
+    """Returns (out, new_cache_or_latents)."""
+    dt = cfg.compute_dtype
+    B, S, D = x.shape
+    H = cfg.n_heads
+
+    q_nope, q_rope = _project_q(params, cfg, x, positions)
+    ckv, k_rope = _project_kv_latent(params, cfg, x, positions)
+
+    if cache is None:
+        # ---- train/prefill: decompress and run standard attention ----
+        Skv = S
+        w_uk = params["w_uk"].astype(dt).reshape(cfg.kv_lora_rank, H, cfg.qk_nope_dim)
+        w_uv = params["w_uv"].astype(dt).reshape(cfg.kv_lora_rank, H, cfg.v_head_dim)
+        k_nope = jnp.einsum("bsl,lhd->bshd", ckv, w_uk)
+        v = jnp.einsum("bsl,lhd->bshd", ckv, w_uv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, Skv, H, cfg.qk_rope_dim))],
+            axis=-1,
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = attention_core(
+            q, k, v, causal=True, window=0, q_offset=positions[0],
+            kv_valid=Skv, chunk=cfg.attn_chunk,
+        )
+        out = out.reshape(B, S, H * cfg.v_head_dim) @ params["wo"].astype(dt)
+        return out, (ckv, k_rope)
+
+    # ---- decode: absorbed matmuls against the latent cache ----
+    slot = jnp.minimum(cache.pos, cache.ckv.shape[1] - 1)
+    new_cache = MLACache(
+        ckv=jax.lax.dynamic_update_slice_in_dim(cache.ckv, ckv.astype(cache.ckv.dtype), slot, 1),
+        krope=jax.lax.dynamic_update_slice_in_dim(cache.krope, k_rope.astype(cache.krope.dtype), slot, 1),
+        length=jnp.minimum(cache.length + 1, cache.ckv.shape[1]),
+        pos=cache.pos + 1,
+    )
+    w_uk = params["w_uk"].astype(dt).reshape(cfg.kv_lora_rank, H, cfg.qk_nope_dim)
+    # absorb W_uk into q: q_lat [B,1,H,kv_lora]
+    q_lat = jnp.einsum("bshd,lhd->bshl", q_nope, w_uk)
+    scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    s_lat = jnp.einsum("bshl,bTl->bshT", q_lat.astype(jnp.float32),
+                       new_cache.ckv.astype(jnp.float32))
+    s_rope = jnp.einsum("bshd,bTd->bshT", q_rope.astype(jnp.float32),
+                        new_cache.krope.astype(jnp.float32))
+    s = (s_lat + s_rope) * scale
+    valid = jnp.arange(new_cache.ckv.shape[1]) < new_cache.length
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # attend over latents, then decompress once per head (absorbed W_uv)
+    ctx_lat = jnp.einsum("bshT,bTl->bshl", p, new_cache.ckv.astype(jnp.float32))
+    w_uv = params["w_uv"].astype(dt).reshape(cfg.kv_lora_rank, H, cfg.v_head_dim)
+    ctx = jnp.einsum("bshl,lhd->bshd", ctx_lat.astype(dt), w_uv)
+    out = ctx.reshape(B, S, H * cfg.v_head_dim) @ params["wo"].astype(dt)
+    return out, new_cache

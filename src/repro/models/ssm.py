@@ -1,0 +1,194 @@
+"""Mamba2 SSD (state-space duality) block — chunked, MXU-friendly form.
+
+Train/prefill uses the SSD block decomposition (arXiv:2405.21060): the
+sequence is split into chunks of Q tokens; intra-chunk terms are dense
+(C B^T ⊙ decay-mask) matmuls (quadratic only within a chunk), inter-chunk
+terms pass a recurrent (H, P, N) state between chunks — so compute is
+matmul-dominated (MXU) instead of an elementwise scan.  Decode is the O(1)
+recurrent update.  Sub-quadratic in S -> this family runs ``long_500k``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ssm_block", "SSMCache", "init_ssm_cache"]
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("conv", "state"), meta_fields=())
+@dataclasses.dataclass
+class SSMCache:
+    conv: jax.Array    # [B, conv_w - 1, conv_ch] trailing inputs
+    state: jax.Array   # [B, H, P, N] recurrent state
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> SSMCache:
+    di = cfg.d_inner_ssm
+    conv_ch = di + 2 * cfg.ssm_state
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), cfg.compute_dtype),
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    )
+
+
+def _split_proj(params, cfg: ModelConfig, x):
+    """in_proj -> (z [B,S,di], xBC [B,S,di+2N], dt_raw [B,S,H])."""
+    dt = cfg.compute_dtype
+    di, N, H = cfg.d_inner_ssm, cfg.ssm_state, cfg.ssm_heads
+    proj = x @ params["in_proj"].astype(dt)
+    z, xBC, dt_raw = jnp.split(proj, [di, 2 * di + 2 * N], axis=-1)
+    return z, xBC, dt_raw
+
+
+def _causal_conv(params, cfg: ModelConfig, xBC, conv_state=None):
+    """Depthwise causal conv (width cfg.ssm_conv) + silu.
+
+    Train: conv_state None, left-pad zeros.  Decode: conv_state [B, w-1, ch]
+    holds the trailing context; returns (y, new_conv_state).
+    """
+    dt = cfg.compute_dtype
+    w = params["conv_w"].astype(dt)      # [w, ch]
+    b = params["conv_b"].astype(dt)
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (width - 1,) + xBC.shape[2:], xBC.dtype)
+        full = jnp.concatenate([pad, xBC], axis=1)
+        new_state = full[:, -(width - 1):] if width > 1 else None
+    else:
+        full = jnp.concatenate([conv_state, xBC], axis=1)
+        new_state = full[:, -(width - 1):]
+    # y[t] = Σ_i w[i] * full[t + i]
+    y = sum(w[i] * jax.lax.dynamic_slice_in_dim(full, i, xBC.shape[1], axis=1)
+            for i in range(width))
+    return jax.nn.silu(y + b), new_state
+
+
+def _gated_norm(params, cfg: ModelConfig, y, z):
+    """Mamba2 output: RMSNorm(y * silu(z)) with learned scale."""
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    out = gf * jax.lax.rsqrt(jnp.mean(jnp.square(gf), -1, keepdims=True) + 1e-6)
+    return (out * params["norm"].astype(jnp.float32)).astype(y.dtype)
+
+
+def _ssd_chunked(cfg: ModelConfig, xh, dtv, A, Bm, Cm, init_state=None):
+    """The SSD algorithm.
+
+    xh: [B,S,H,P] inputs; dtv: [B,S,H] positive step sizes; A: [H] (<0);
+    Bm/Cm: [B,S,N] (single group, broadcast over heads).
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    Bb, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    f32 = jnp.float32
+    xc = xh.reshape(Bb, nc, Q, H, Pd).astype(f32)
+    dtc = dtv.reshape(Bb, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(Bb, nc, Q, N).astype(f32)
+    Cc = Cm.reshape(Bb, nc, Q, N).astype(f32)
+
+    dA = dtc * A[None, None, None, :]              # [B,nc,Q,H] (negative)
+    cum = jnp.cumsum(dA, axis=2)                   # within-chunk cumulative
+    chunk_sum = cum[:, :, -1, :]                   # [B,nc,H]
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for j<=i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,nc,Qi,Qj,H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    # scores CB[i,j] = C_i . B_j  (single group)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    xdt = xc * dtc[..., None]                      # dt-weighted inputs
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", CB, L.transpose(0, 1, 2, 3, 4), xdt)
+
+    # chunk states: sum_j exp(chunk_sum - cum_j) * xdt_j ⊗ B_j
+    decay_out = jnp.exp(chunk_sum[:, :, None, :] - cum)    # [B,nc,Q,H]
+    states = jnp.einsum("bcjh,bcjhp,bcjn->bchpn", decay_out, xdt, Bc)
+
+    # inter-chunk recurrence
+    s0 = jnp.zeros((Bb, H, Pd, N), f32) if init_state is None else init_state.astype(f32)
+
+    def step(carry, inp):
+        st_prev = carry
+        chunk_state, csum = inp
+        st = st_prev * jnp.exp(csum)[:, :, None, None] + chunk_state
+        return st, st_prev
+
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_sum.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # [B,nc,H,P,N]
+
+    # inter-chunk output: C_i . (decay_in_i * state_prev)
+    decay_in = jnp.exp(cum)                                # [B,nc,Q,H]
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, prev_states, decay_in)
+
+    y = (y_intra + y_inter).reshape(Bb, Sp, H, Pd)[:, :S]
+    return y, final
+
+
+def ssm_block(params: dict, cfg: ModelConfig, x: jax.Array,
+              cache: SSMCache | None = None):
+    """Full Mamba2 block: in_proj, conv, SSD, gated norm, out_proj.
+
+    Returns (out [B,S,D], new_cache_or_final_state).
+    """
+    dt = cfg.compute_dtype
+    B, S, D = x.shape
+    H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = cfg.d_inner_ssm
+
+    z, xBC, dt_raw = _split_proj(params, cfg, x)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                          params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    if cache is None:
+        xBC_pre = xBC
+        xBC, conv_tail = _causal_conv(params, cfg, xBC)
+        xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+        xh = xs.reshape(B, S, H, Pd)
+        y, final = _ssd_chunked(cfg, xh, dtv, A, Bm, Cm)
+        y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, S, di).astype(dt)
+        out = _gated_norm(params, cfg, y, z) @ params["out_proj"].astype(dt)
+        # prefill hands decode a ready cache (conv tail = trailing PRE-conv
+        # inputs; _causal_conv returns exactly that)
+        new_cache = SSMCache(
+            conv=xBC_pre[:, -(cfg.ssm_conv - 1):].astype(dt) if S >= cfg.ssm_conv - 1
+            else jnp.pad(xBC_pre, ((0, 0), (cfg.ssm_conv - 1 - S, 0), (0, 0))).astype(dt),
+            state=final,
+        )
+        return out, new_cache
+
+    # ---- decode: O(1) recurrent update (S == 1) ----
+    xBC_c, new_conv = _causal_conv(params, cfg, xBC, cache.conv)
+    xs, Bm, Cm = jnp.split(xBC_c, [di, di + N], axis=-1)
+    xh = xs.reshape(B, 1, H, Pd).astype(jnp.float32)[:, 0]        # [B,H,P]
+    dt1 = dtv[:, 0]                                               # [B,H]
+    Bm1 = Bm[:, 0].astype(jnp.float32)                            # [B,N]
+    Cm1 = Cm[:, 0].astype(jnp.float32)
+    dA = jnp.exp(dt1 * A[None, :])                                # [B,H]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt1, xh, Bm1)
+    state = cache.state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm1, state)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(dt)
+    out = _gated_norm(params, cfg, y, z) @ params["out_proj"].astype(dt)
+    return out, SSMCache(conv=new_conv, state=state)

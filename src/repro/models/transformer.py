@@ -1,0 +1,360 @@
+"""Layer stacks for all families: train / prefill / decode, scan + remat.
+
+One ``layer_fn`` serves every family (dense / moe / mla / ssm / hybrid /
+encdec-decoder); the stack runs it under ``jax.lax.scan`` over stacked
+layer params (HLO size O(1) in depth) with a configurable remat policy.
+Per-layer heterogeneity (hymba's global-vs-window attention) rides along
+as scanned per-layer scalars, so the scanned body stays homogeneous.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import embed_tokens, mlp, norm, sub, unembed
+from repro.sharding import shard, current_mesh
+
+__all__ = [
+    "layer_windows",
+    "forward_train",
+    "encode",
+    "prefill",
+    "decode_step",
+    "init_decode_caches",
+]
+
+
+# ---------------------------------------------------------------------------
+# per-layer static schedule
+# ---------------------------------------------------------------------------
+
+def layer_windows(cfg: ModelConfig, force_window: bool = False):
+    """int32[L]: attention window per layer (0 = global)."""
+    w = []
+    for i in range(cfg.n_layers):
+        if cfg.window and (i not in cfg.global_layers or force_window):
+            w.append(cfg.window)
+        else:
+            w.append(0)
+    return jnp.asarray(w, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+def _fuse_paths(params, a_out, s_out):
+    """Hymba-style fusion: per-path RMS-normalized, learned gains, mean."""
+    def _n(x):
+        xf = x.astype(jnp.float32)
+        return xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + 1e-6)
+
+    ga = params["fuse/gain_attn"].astype(jnp.float32)
+    gs = params["fuse/gain_ssm"].astype(jnp.float32)
+    return (0.5 * (_n(a_out) * ga + _n(s_out) * gs)).astype(a_out.dtype)
+
+
+def layer_fn(params, cfg: ModelConfig, x, *, positions, window, mode,
+             cache=None, enc_out=None):
+    """One decoder layer. mode: train | prefill | decode.
+
+    cache: dict {attn, ssm, cross} or None. Returns (x', new_cache, aux).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    h = norm(sub(params, "norm1"), cfg, x)
+    h = shard(h, ("act_batch", "act_seq", "act_embed"))
+
+    if cfg.family == "ssm":
+        s_out, s_state = ssm_mod.ssm_block(
+            sub(params, "ssm"), cfg, h,
+            cache=cache.get("ssm") if cache else None)
+        x = x + s_out
+        new_cache["ssm"] = s_state if mode != "train" else None
+    else:
+        if cfg.use_mla:
+            a_out, a_state = mla_mod.mla_block(
+                sub(params, "attn"), cfg, h, positions=positions,
+                cache=cache.get("attn") if cache else None)
+        else:
+            a_out, a_state = attn_mod.attn_block(
+                sub(params, "attn"), cfg, h, positions=positions,
+                causal=True, window=window,
+                cache=cache.get("attn") if cache else None)
+        if cfg.family == "hybrid":
+            s_out, s_state = ssm_mod.ssm_block(
+                sub(params, "ssm"), cfg, h,
+                cache=cache.get("ssm") if cache else None)
+            x = x + _fuse_paths(params, a_out, s_out)
+            new_cache["ssm"] = s_state if mode != "train" else None
+        else:
+            x = x + a_out
+        new_cache["attn"] = a_state if mode != "train" else None
+
+        if cfg.is_encdec:
+            hc = norm(sub(params, "norm_cross"), cfg, x)
+            if mode == "decode" and cache and cache.get("cross") is not None:
+                ck, cv = cache["cross"]
+                c_out = _cross_from_cache(params, cfg, hc, ck, cv)
+                new_cache["cross"] = (ck, cv)
+            else:
+                c_out, ckv = attn_mod.attn_block(
+                    sub(params, "cross"), cfg, hc, positions=positions,
+                    causal=False, xa=enc_out)
+                new_cache["cross"] = ckv if mode != "train" else None
+            x = x + c_out
+
+    x = shard(x, ("act_batch", "act_seq", "act_embed"))
+    if cfg.family == "moe":
+        h2 = norm(sub(params, "norm2"), cfg, x)
+        mesh = current_mesh()
+        y, aux = moe_mod.moe_ffn(
+            sub(params, "moe"), cfg, h2, mesh=mesh,
+            dp_axes=("pod", "data") if mesh and "pod" in mesh.shape else ("data",))
+        x = x + y
+    elif cfg.family != "ssm":  # pure mamba stack has no MLP (d_ff = 0)
+        h2 = norm(sub(params, "norm2"), cfg, x)
+        h2 = shard(h2, ("act_batch", "act_seq", "act_embed"))
+        x = x + mlp(sub(params, "mlp"), cfg, h2)
+    x = shard(x, ("act_batch", "act_seq", "act_embed"))
+    return x, new_cache, aux
+
+
+def _cross_from_cache(params, cfg: ModelConfig, x, ck, cv):
+    """Cross-attention against precomputed encoder K/V (decode path)."""
+    dt = cfg.compute_dtype
+    B, Sq, D = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x @ params["cross/wq"].astype(dt))
+    if "cross/bq" in params:
+        q = q + params["cross/bq"].astype(dt)
+    q = q.reshape(B, Sq, H, Dh)
+    out = attn_mod.attention_core(
+        q, ck, cv, causal=False, window=0, q_offset=0,
+        kv_valid=ck.shape[1], chunk=cfg.attn_chunk)
+    return out.reshape(B, Sq, H * Dh) @ params["cross/wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat_policy == "full":
+        return fn
+    if cfg.remat_policy == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "nothing" saveable
+
+
+def _split_layer_params(params: dict, prefix: str) -> dict:
+    pre = prefix + "/"
+    return {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}
+
+
+def run_stack(params, cfg: ModelConfig, x, *, positions, mode,
+              caches=None, enc_out=None, prefix="layers",
+              windows=None, n_layers=None):
+    """Scan (or unrolled loop) over the layer stack."""
+    lp = _split_layer_params(params, prefix)
+    L = n_layers if n_layers is not None else cfg.n_layers
+    if windows is None:
+        windows = layer_windows(cfg) if prefix == "layers" else jnp.zeros((L,), jnp.int32)
+
+    if not cfg.scan_layers:
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+
+        def one(li, xc, w, c):
+            return layer_fn(li, cfg, xc, positions=positions, window=w,
+                            mode=mode, cache=c, enc_out=enc_out)
+
+        if mode == "train" and cfg.remat_policy != "full":
+            one = _remat(one, cfg)
+        for i in range(L):
+            li = {k: v for k, v in _split_layer_params(params, f"{prefix}_{i}").items()}
+            c = jax.tree.map(lambda a: a[i], caches) if caches is not None else None
+            x, nc, aux = one(li, x, windows[i], c)
+            aux_total += aux
+            new_caches.append(nc)
+        stacked = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+                   if mode != "train" else None)
+        return x, stacked, aux_total
+
+    def body(carry, per_layer):
+        xc, aux_acc = carry
+        lparams, w, c = per_layer
+        xc, nc, aux = layer_fn(lparams, cfg, xc, positions=positions,
+                               window=w, mode=mode, cache=c, enc_out=enc_out)
+        return (xc, aux_acc + aux), nc
+
+    body = _remat(body, cfg) if mode == "train" else body
+    (x, aux_total), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (lp, windows, caches))
+    return x, (new_caches if mode != "train" else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def _positions(cfg, start, S):
+    return start + jnp.arange(S)
+
+
+def _embed_input(params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    """tokens [B, St] (+ optional prefix embeds [B, Pfx, D]) -> [B, S, D]."""
+    x = embed_tokens(params, cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    if cfg.pos == "learned":
+        S = x.shape[1]
+        x = x + params["embed/pos"][:S].astype(x.dtype)
+    return x
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    x = frames.astype(cfg.compute_dtype)
+    x = x + params["encoder/pos"][: x.shape[1]].astype(x.dtype)
+    x = shard(x, ("act_batch", "act_seq", "act_embed"))
+
+    lp = _split_layer_params(params, "enc_layers")
+
+    def body(carry, lparams):
+        xc = carry
+        h = norm(sub(lparams, "norm1"), cfg, xc)
+        a, _ = attn_mod.attn_block(sub(lparams, "attn"), cfg, h,
+                                   positions=jnp.arange(xc.shape[1]),
+                                   causal=False)
+        xc = xc + a
+        h2 = norm(sub(lparams, "norm2"), cfg, xc)
+        xc = xc + mlp(sub(lparams, "mlp"), cfg, h2)
+        return xc, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, lp)
+    else:
+        for i in range(cfg.n_enc_layers):
+            x, _ = body(x, _split_layer_params(params, f"enc_layers_{i}"))
+    return norm(sub(params, "encoder/norm_f"), cfg, x)
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+                   enc_frames=None):
+    """Teacher-forced final hidden states [B, S, D] (pre-unembed) + aux."""
+    enc_out = encode(params, cfg, enc_frames) if cfg.is_encdec else None
+    x = _embed_input(params, cfg, tokens, prefix_embeds)
+    x = shard(x, ("act_batch", "act_seq", "act_embed"))
+    positions = _positions(cfg, 0, x.shape[1])
+    x, _, aux = run_stack(params, cfg, x, positions=positions, mode="train",
+                          enc_out=enc_out)
+    x = norm(sub(params, "norm_f"), cfg, x)
+    return x, aux
+
+
+def forward_train(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+                  enc_frames=None):
+    """Teacher-forced logits for training. Returns (logits, aux_loss)."""
+    x, aux = forward_hidden(params, cfg, tokens, prefix_embeds, enc_frames)
+    logits = unembed(params, cfg, x)
+    logits = shard(logits, ("act_batch", "act_seq", "act_vocab"))
+    return logits, aux
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, buf_len: int,
+                       long_context: bool = False):
+    """Stacked (L-leading) cache pytree for decode."""
+    L = cfg.n_layers
+
+    def stk(leaf_fn):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[leaf_fn() for _ in range(L)])
+
+    caches = {}
+    if cfg.family == "ssm":
+        caches = {"ssm": stk(lambda: ssm_mod.init_ssm_cache(cfg, batch))}
+    elif cfg.use_mla:
+        caches = {"attn": stk(lambda: mla_mod.init_mla_cache(cfg, batch, buf_len))}
+    else:
+        ring = long_context and cfg.window > 0
+        buf = min(buf_len, cfg.window) if ring else buf_len
+        caches = {"attn": stk(lambda: attn_mod.init_cache(
+            cfg, batch, buf, cfg.n_kv_heads, cfg.d_head, ring=ring))}
+        if cfg.family == "hybrid":
+            caches["ssm"] = stk(lambda: ssm_mod.init_ssm_cache(cfg, batch))
+        if cfg.is_encdec:
+            dt = cfg.compute_dtype
+            caches["cross"] = (
+                jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.d_head), dt),
+                jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.d_head), dt),
+            )
+    return caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+            enc_frames=None, buf_len: int | None = None):
+    """Process a prompt, return (last-position logits, decode caches).
+
+    buf_len: KV-buffer capacity for subsequent decode (>= prompt length);
+    defaults to prompt length + 64.
+    """
+    enc_out = encode(params, cfg, enc_frames) if cfg.is_encdec else None
+    x = _embed_input(params, cfg, tokens, prefix_embeds)
+    x = shard(x, ("act_batch", "act_seq", "act_embed"))
+    S = x.shape[1]
+    positions = _positions(cfg, 0, S)
+    x, kv_per_layer, _ = run_stack(params, cfg, x, positions=positions,
+                                   mode="prefill", enc_out=enc_out)
+    x = norm(sub(params, "norm_f"), cfg, x[:, -1:])
+    logits = unembed(params, cfg, x)
+
+    caches = _assemble_prefill_caches(cfg, kv_per_layer, S,
+                                      buf_len if buf_len else S + 64)
+    return logits[:, 0], caches
+
+
+def _assemble_prefill_caches(cfg: ModelConfig, kv_per_layer, S, buf_len):
+    """Wrap per-layer prefill outputs into decode-ready cache pytrees."""
+    caches = {}
+    length = jnp.full((cfg.n_layers,), S, jnp.int32)
+    grow = max(0, buf_len - S)
+
+    def pad_seq(x):  # [L, B, S, ...] -> [L, B, buf, ...]
+        widths = [(0, 0)] * x.ndim
+        widths[2] = (0, grow)
+        return jnp.pad(x, widths)
+
+    if kv_per_layer.get("ssm") is not None:
+        caches["ssm"] = kv_per_layer["ssm"]      # stacked SSMCache
+    if kv_per_layer.get("attn") is not None:
+        if cfg.use_mla:
+            ckv, krope = kv_per_layer["attn"]
+            caches["attn"] = mla_mod.MLACache(ckv=pad_seq(ckv), krope=pad_seq(krope),
+                                              length=length, pos=length)
+        else:
+            k, v = kv_per_layer["attn"]
+            caches["attn"] = attn_mod.KVCache(k=pad_seq(k), v=pad_seq(v),
+                                              length=length, pos=length, ring=False)
+    if kv_per_layer.get("cross") is not None:
+        caches["cross"] = kv_per_layer["cross"]
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, token, pos):
+    """One decode step: token [B] int32, pos scalar. -> (logits [B,V], caches)."""
+    x = embed_tokens(params, cfg, token[:, None])
+    if cfg.pos == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["embed/pos"], pos, 1, axis=0).astype(x.dtype)[None]
+    positions = pos[None] if hasattr(pos, "shape") else jnp.asarray([pos])
+    x, new_caches, _ = run_stack(params, cfg, x, positions=positions,
+                                 mode="decode", caches=caches)
+    x = norm(sub(params, "norm_f"), cfg, x)
+    logits = unembed(params, cfg, x)
+    return logits[:, 0], new_caches

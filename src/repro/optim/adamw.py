@@ -1,0 +1,152 @@
+"""AdamW with cosine schedule, global-norm clipping, and optional int8
+block-quantized moments (the distributed-optimization trick that lets the
+314B-param archs carry optimizer state on 16GB/chip meshes).
+
+Pure-JAX (no optax in this environment): state is a pytree mirroring the
+params, updates are functional.  Quantized moments store int8 codes plus a
+per-block fp32 absmax scale (block = last-dim groups of 128), dequantized
+on the fly inside the update — memory 4x smaller than fp32 moments at ~1e-2
+relative quantization error, standard for large-scale setups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "adamw_update", "cosine_lr"]
+
+_BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"   # "float32" | "int8"
+
+
+def cosine_lr(cfg: OptConfig, step) -> jax.Array:
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * jnp.clip(prog, 0.0, 1.0)))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, 0.1 + 0.9 * cos)
+
+
+# --- int8 blockwise quantization ------------------------------------------
+
+def _pad_len(n: int) -> int:
+    return (-n) % _BLOCK
+
+
+def _quantize(x: jax.Array):
+    """fp32 [..., d] -> (int8 codes [..., d_pad], fp32 scales [..., d_pad/B])."""
+    d = x.shape[-1]
+    pad = _pad_len(d)
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+    blocks = xp.reshape(xp.shape[:-1] + (-1, _BLOCK))
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return codes.reshape(xp.shape), scale[..., 0]
+
+
+def _dequantize(codes: jax.Array, scale: jax.Array, d: int):
+    blocks = codes.reshape(codes.shape[:-1] + (-1, _BLOCK)).astype(jnp.float32)
+    x = blocks * scale[..., None]
+    return x.reshape(codes.shape)[..., :d]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Moment:
+    """One quantized moment tensor."""
+
+    codes: jax.Array
+    scale: jax.Array
+    d: int
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), self.d
+
+    @classmethod
+    def tree_unflatten(cls, d, leaves):
+        return cls(*leaves, d=d)
+
+    def value(self) -> jax.Array:
+        return _dequantize(self.codes, self.scale, self.d)
+
+    @classmethod
+    def of(cls, x: jax.Array) -> "Moment":
+        codes, scale = _quantize(x)
+        return cls(codes, scale, x.shape[-1])
+
+
+def _zeros_like_moment(p: jax.Array, quantize: bool):
+    if quantize and p.ndim >= 1 and p.shape[-1] >= _BLOCK:
+        return Moment.of(jnp.zeros(p.shape, jnp.float32))
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def init_opt_state(params: dict, cfg: OptConfig) -> dict:
+    q = cfg.state_dtype == "int8"
+    return {
+        "m": {k: _zeros_like_moment(v, q) for k, v in params.items()},
+        "v": {k: _zeros_like_moment(v, q) for k, v in params.items()},
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _as_value(x):
+    return x.value() if isinstance(x, Moment) else x
+
+
+def _like(old, new_val: jax.Array):
+    return Moment.of(new_val) if isinstance(old, Moment) else new_val
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params: dict, grads: dict, state: dict, cfg: OptConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cosine_lr(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    new_params, new_m, new_v = {}, {}, {}
+    for k, p in params.items():
+        g = grads[k].astype(jnp.float32) * scale
+        m = _as_value(state["m"][k])
+        v = _as_value(state["v"][k])
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_params[k] = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        new_m[k] = _like(state["m"][k], m)
+        new_v[k] = _like(state["v"][k], v)
+
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

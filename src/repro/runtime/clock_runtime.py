@@ -1,0 +1,139 @@
+"""ClockRuntime: the bloom clock wired into the training/serving fleet.
+
+Every process keeps one BloomClock.  Events that tick it:
+  - data batches consumed        (event id = hash(run_id, "batch", step))
+  - optimizer steps committed    (hash(run_id, "step", step))
+  - checkpoints written          (hash(run_id, "ckpt", step))
+  - elastic membership changes   (hash(run_id, "scale", epoch, n_new))
+  - serving requests admitted    (hash(session, seq_no))
+
+Decisions the runtime takes from clock comparisons (all O(m), independent
+of fleet size — the paper's point):
+  - **checkpoint lineage**: a restore is legal iff ckpt.clock ≼ live clock
+    (or live is empty); a *forked* lineage (concurrent clocks) aborts.
+  - **async merge guard**: a peer's update is merged iff its clock is
+    comparable with ours within an Eq.-3 fp threshold; concurrent clocks
+    mean a missed sync -> the update is quarantined (returned to caller).
+  - **straggler detection**: clock sums are monotone progress counters;
+    peers lagging more than ``straggler_gap`` ticks are skipped, no
+    barrier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clock as bc
+from repro.core import history as hist
+from repro.core.hashing import stable_event_id
+
+__all__ = ["ClockConfig", "ClockRuntime", "LineageStatus"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockConfig:
+    m: int = 1024            # cells — 4KB/clock on the wire (int32)
+    k: int = 4               # probes/event
+    fp_threshold: float = 1e-4
+    history_window: int = 32
+    straggler_gap: float = 64.0  # clock-sum ticks
+
+
+class LineageStatus:
+    ANCESTOR = "ancestor"        # other ≼ mine: other is in my past (safe)
+    SAME = "same"
+    DESCENDANT = "descendant"    # mine ≼ other: other is ahead of me
+    FORKED = "forked"            # concurrent: split brain / missed sync
+
+
+class ClockRuntime:
+    def __init__(self, cfg: ClockConfig, run_id: str = "run0"):
+        self.cfg = cfg
+        self.run_id = run_id
+        self.clock = bc.zeros(cfg.m, cfg.k)
+        self.history = hist.init(cfg.history_window, cfg.m, cfg.k)
+
+    # ---- events ----
+    def tick(self, *parts) -> None:
+        hi, lo = stable_event_id(self.run_id, *parts)
+        self.clock = bc.tick(self.clock, jnp.uint32(hi), jnp.uint32(lo))
+        self.history = hist.push(self.history, self.clock)
+
+    def tick_step(self, step: int) -> None:
+        self.tick("step", step)
+
+    def tick_batch(self, step: int) -> None:
+        self.tick("batch", step)
+
+    def tick_checkpoint(self, step: int) -> None:
+        self.tick("ckpt", step)
+
+    def tick_scale_event(self, epoch: int, n_members: int) -> None:
+        self.tick("scale", epoch, n_members)
+
+    # ---- comparisons ----
+    def lineage(self, other: bc.BloomClock) -> tuple[str, float]:
+        """Classify another clock against ours + Eq.-3 confidence."""
+        o = bc.compare(other, self.clock)
+        if bool(o.equal):
+            return LineageStatus.SAME, 0.0
+        if bool(o.a_le_b):
+            return LineageStatus.ANCESTOR, float(o.fp_a_before_b)
+        if bool(o.b_le_a):
+            return LineageStatus.DESCENDANT, float(o.fp_b_before_a)
+        return LineageStatus.FORKED, 0.0   # exact — no false negatives (§3)
+
+    def refined_fp(self, other: bc.BloomClock) -> float:
+        """§3 history refinement: fp against the closest dominating stored
+        timestamp instead of the newest."""
+        fp, _ = hist.best_predecessor_fp(self.history, other)
+        return float(fp)
+
+    def admit_restore(self, ckpt_clock: bc.BloomClock) -> tuple[bool, str, float]:
+        """Is restoring from this checkpoint causally safe?"""
+        status, fp = self.lineage(ckpt_clock)
+        if status == LineageStatus.FORKED:
+            return False, status, fp
+        if status == LineageStatus.ANCESTOR:
+            fp = min(fp, self.refined_fp(ckpt_clock))
+            return fp <= self.cfg.fp_threshold or float(bc.clock_sum(self.clock)) == 0.0, status, fp
+        return True, status, fp
+
+    def admit_merge(self, peer_clock: bc.BloomClock) -> tuple[bool, str, float]:
+        """Async outer-loop guard: merge a peer's update?
+
+        Comparable (either direction) with confident fp -> merge + clock max.
+        Concurrent -> quarantine (the peer missed a sync barrier).
+        """
+        status, fp = self.lineage(peer_clock)
+        ok = status != LineageStatus.FORKED and fp <= self.cfg.fp_threshold
+        if ok:
+            self.clock = bc.merge(self.clock, peer_clock)
+            self.clock = bc.compress(self.clock)
+        return ok, status, fp
+
+    # ---- straggler policy ----
+    def straggler_mask(self, peer_sums: np.ndarray) -> np.ndarray:
+        """True for peers to SKIP this round (too far behind the median)."""
+        med = np.median(peer_sums)
+        return (med - np.asarray(peer_sums)) > self.cfg.straggler_gap
+
+    # ---- wire format ----
+    def snapshot(self) -> dict:
+        c = bc.compress(self.clock)
+        return {
+            "cells": np.asarray(c.cells),
+            "base": int(c.base),
+            "k": c.k,
+        }
+
+    @staticmethod
+    def clock_from_snapshot(snap: dict) -> bc.BloomClock:
+        return bc.BloomClock(
+            cells=jnp.asarray(snap["cells"], jnp.int32),
+            base=jnp.asarray(int(snap["base"]), jnp.int32),
+            k=int(snap["k"]),
+        )

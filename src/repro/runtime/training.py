@@ -1,0 +1,175 @@
+"""Train step construction: loss, grads, AdamW, in-graph clock tick.
+
+The bloom clock rides inside the jitted step as part of TrainState (m int32
+cells): each committed step ticks it with the batch event id, so the clock
+is *part of the replicated training state* — a checkpoint written at step
+N carries exactly the causal history of the steps/batches that produced
+it, and two checkpoints from diverged runs are provably (Eq. 3) ordered
+or provably concurrent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clock as bc
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim.adamw import OptConfig, adamw_update, init_opt_state
+from repro.runtime.clock_runtime import ClockConfig
+from repro.sharding import shard
+
+__all__ = ["TrainState", "init_train_state", "make_train_step", "cross_entropy"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: dict
+    opt: dict
+    clock_cells: jax.Array   # int32[m] — in-graph bloom clock
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.clock_cells, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+
+def init_train_state(key, cfg: ModelConfig, opt_cfg: OptConfig,
+                     clock_cfg: ClockConfig) -> TrainState:
+    from repro.models.params import init_params
+
+    params = init_params(key, cfg)
+    return TrainState(
+        params=params,
+        opt=init_opt_state(params, opt_cfg),
+        clock_cells=jnp.zeros((clock_cfg.m,), jnp.int32),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab: int,
+                  z_loss: float = 1e-4):
+    """Stable CE in fp32 with optional z-loss; ignores labels >= vocab."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    mask = (labels >= 0) & (labels < vocab)
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    loss = jnp.sum(jnp.where(mask, ce, 0.0)) / denom
+    if z_loss:
+        loss = loss + z_loss * jnp.sum(jnp.where(mask, jnp.square(lse), 0.0)) / denom
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    clock_cfg: ClockConfig, aux_coef: float = 0.01,
+                    num_microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch: tokens/labels [B, S] int32, ev_hi/ev_lo uint32 scalars (bloom
+    event id of this batch), optional prefix_embeds / enc_frames stubs.
+    Microbatching (grad accumulation) slices the batch dim.
+    """
+
+    def loss_fn(params, batch):
+        if cfg.ce_chunk:
+            # seq-chunked CE: never materialize the full [B, S, V] logits —
+            # unembed + logsumexp chunk-by-chunk under lax.scan (the logits
+            # of a chunk die before the next chunk is formed)
+            from repro.models.layers import unembed
+
+            hidden, aux = T.forward_hidden(
+                params, cfg, batch["tokens"],
+                prefix_embeds=batch.get("prefix_embeds"),
+                enc_frames=batch.get("enc_frames"))
+            if cfg.n_prefix:
+                hidden = hidden[:, cfg.n_prefix:]
+            S = hidden.shape[1]
+            C = min(cfg.ce_chunk, S)
+            pad = (-S) % C
+            labels = batch["labels"]
+            if pad:
+                hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+                labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                                 constant_values=-1)  # masked out
+            n_chunks = (S + pad) // C
+
+            def body(carry, i):
+                tot, cnt = carry
+                h = jax.lax.dynamic_slice_in_dim(hidden, i * C, C, axis=1)
+                lb = jax.lax.dynamic_slice_in_dim(labels, i * C, C, axis=1)
+                logits = unembed(params, cfg, h).astype(jnp.float32)
+                lse = jax.nn.logsumexp(logits, axis=-1)
+                gold = jnp.take_along_axis(
+                    logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+                mask = (lb >= 0) & (lb < cfg.vocab)
+                ce = jnp.where(mask, lse - gold + 1e-4 * jnp.square(lse), 0.0)
+                return (tot + jnp.sum(ce), cnt + jnp.sum(mask)), None
+
+            (tot, cnt), _ = jax.lax.scan(
+                body, (jnp.zeros(()), jnp.zeros((), jnp.int32)),
+                jnp.arange(n_chunks))
+            loss = tot / jnp.maximum(cnt, 1)
+        else:
+            logits, aux = T.forward_train(
+                params, cfg, batch["tokens"],
+                prefix_embeds=batch.get("prefix_embeds"),
+                enc_frames=batch.get("enc_frames"),
+            )
+            if cfg.n_prefix:  # vlm: loss over token region only
+                logits = logits[:, cfg.n_prefix:]
+            loss = cross_entropy(logits, batch["labels"], cfg.vocab)
+        return loss + aux_coef * aux, (loss, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if num_microbatches == 1:
+            (tot, (loss, aux)), grads = grad_fn(params, batch)
+            return grads, loss, aux
+        B = batch["tokens"].shape[0]
+        assert B % num_microbatches == 0
+        mb = B // num_microbatches
+
+        def mb_slice(x, i):
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+        def body(carry, i):
+            g_acc, l_acc, a_acc = carry
+            sub_batch = {k: mb_slice(v, i) if hasattr(v, "ndim") and v.ndim >= 1
+                         and v.shape[0] == B else v for k, v in batch.items()}
+            (tot, (loss, aux)), g = grad_fn(params, sub_batch)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            return (g_acc, l_acc + loss, a_acc + aux), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g, l, a), _ = jax.lax.scan(
+            body, (g0, jnp.zeros(()), jnp.zeros(())),
+            jnp.arange(num_microbatches))
+        n = float(num_microbatches)
+        return jax.tree.map(lambda x: x / n, g), l / n, a / n
+
+    def train_step(state: TrainState, batch: dict):
+        grads, loss, aux = compute_grads(state.params, batch)
+        params, opt, om = adamw_update(state.params, grads, state.opt, opt_cfg)
+        # in-graph clock tick: this step's batch event enters causal history
+        clock = bc.BloomClock(state.clock_cells, jnp.zeros((), jnp.int32),
+                              clock_cfg.k)
+        clock = bc.tick(clock, batch["ev_hi"], batch["ev_lo"])
+        new_state = TrainState(params=params, opt=opt,
+                               clock_cells=clock.cells + clock.base,
+                               step=state.step + 1)
+        metrics = {"loss": loss, "aux": aux, **om,
+                   "clock_sum": jnp.sum(clock.cells).astype(jnp.float32)}
+        return new_state, metrics
+
+    return train_step

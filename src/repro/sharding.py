@@ -1,0 +1,179 @@
+"""Logical-axis sharding: one rule table maps tensor dims -> mesh axes.
+
+MaxText-style: every parameter dim carries a logical axis name (see
+``models/params.py``); activations are constrained at block boundaries via
+``shard(x, (names...))``.  Rules resolve a logical name to a mesh axis (or
+a tuple of axes), with automatic fallback to replication when the dim is
+not divisible by the mesh-axis extent — so every (arch x shape x mesh)
+cell compiles, and suboptimal fallbacks show up in the roofline instead of
+as compile failures.
+
+The active (mesh, rules) pair is installed with ``use_mesh_rules`` —
+model code stays mesh-agnostic and smoke tests run unsharded.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DEFAULT_RULES",
+    "make_rules",
+    "logical_to_pspec",
+    "param_pspecs",
+    "shard",
+    "use_mesh_rules",
+    "current_mesh",
+]
+
+# logical axis -> mesh axis (str), tuple of axes, or None (replicate).
+# "*_v" names are small vectors (biases/scales): always replicated.
+DEFAULT_RULES = {
+    # weights
+    "vocab": "model",
+    "embed": "data",          # FSDP dim
+    "q_heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    # experts take the model axis when the count divides it (deepseek);
+    # otherwise the per-expert hidden dim picks it up (grok: 8 experts on a
+    # 16-wide axis -> expert weights shard over d_ff instead of replicating)
+    "expert_mlp": "model",
+    "experts": "model",
+    "experts_r": None,
+    "lora": None,
+    "ssm_inner": "model",
+    "layers": None,
+    "seq_tab": None,
+    "conv_v": None,
+    # activations
+    "act_batch": ("pod", "data"),
+    "act_seq": None,           # flips to "model" under sequence parallelism
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv": "model",
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "act_experts": "model",
+    "act_expert_cap": None,
+    "act_state": None,
+    # decode KV caches: shard the cache SEQ dim over model (kv-head counts
+    # rarely divide 16); decode attention contracts over it -> SPMD emits
+    # partial softmax + reduce instead of gathering the cache
+    "act_seq_cache": "model",
+    "act_kv_cache": None,
+    "act_ssm_heads": "model",
+}
+
+
+def make_rules(**overrides) -> dict:
+    r = dict(DEFAULT_RULES)
+    r.update(overrides)
+    return r
+
+
+class _Ctx:
+    def __init__(self, mesh: Optional[Mesh], rules: dict):
+        self.mesh = mesh
+        self.rules = rules
+
+
+_ACTIVE: contextvars.ContextVar[Optional[_Ctx]] = contextvars.ContextVar(
+    "shard_ctx", default=None
+)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    tok = _ACTIVE.set(_Ctx(mesh, rules or DEFAULT_RULES))
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = _ACTIVE.get()
+    return ctx.mesh if ctx else None
+
+
+def _axis_extent(mesh: Mesh, spec_entry) -> int:
+    if spec_entry is None:
+        return 1
+    if isinstance(spec_entry, tuple):
+        return math.prod(mesh.shape.get(a, 1) for a in spec_entry)
+    return mesh.shape.get(spec_entry, 1)
+
+
+def _resolve_entry(mesh: Mesh, rules: dict, name: Optional[str], dim: int):
+    """Rule lookup + divisibility fallback (replicate if it doesn't divide)."""
+    if name is None:
+        return None
+    entry = rules.get(name)
+    if entry is None:
+        return None
+    if isinstance(entry, tuple):
+        # drop axes missing from this mesh (e.g. "pod" on single-pod)
+        entry = tuple(a for a in entry if a in mesh.shape)
+        if not entry:
+            return None
+        ext = _axis_extent(mesh, entry)
+        if dim % ext != 0:
+            # try progressively shorter prefixes
+            while entry and dim % _axis_extent(mesh, entry) != 0:
+                entry = entry[:-1]
+            return entry or None
+        return entry
+    if entry not in mesh.shape:
+        return None
+    if dim % mesh.shape[entry] != 0:
+        return None
+    return entry
+
+
+def logical_to_pspec(mesh: Mesh, rules: dict, axes: tuple, shape: tuple) -> P:
+    """Logical axes + concrete shape -> PartitionSpec (with fallbacks).
+
+    Guarantees no mesh axis is used twice in one spec (XLA requirement):
+    first-come wins, later dims fall back to replication.
+    """
+    used: set = set()
+    entries = []
+    for name, dim in zip(axes, shape):
+        e = _resolve_entry(mesh, rules, name if name and not name.endswith("_v") else None, dim)
+        if e is None:
+            entries.append(None)
+            continue
+        flat = e if isinstance(e, tuple) else (e,)
+        if any(a in used for a in flat):
+            entries.append(None)
+            continue
+        used.update(flat)
+        entries.append(e)
+    return P(*entries)
+
+
+def param_pspecs(mesh: Mesh, rules: dict, table: dict) -> dict:
+    """param_table -> {path: NamedSharding}."""
+    return {
+        path: NamedSharding(mesh, logical_to_pspec(mesh, rules, info.axes, info.shape))
+        for path, info in table.items()
+    }
+
+
+def shard(x: jax.Array, axes: tuple):
+    """Activation sharding constraint by logical names; no-op without ctx."""
+    ctx = _ACTIVE.get()
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = logical_to_pspec(ctx.mesh, ctx.rules, axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

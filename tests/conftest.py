@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# smoke tests / benches must see ONE device (the dry-run sets its own
+# XLA_FLAGS in-process before importing jax — never here).
+jax.config.update("jax_platforms", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,171 @@
+"""Unit tests for the Bloom clock core (paper §3/§4 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clock as bc
+from repro.core import vector_clock as vc
+from repro.core.hashing import bloom_indices, stable_event_id
+
+
+def _ev(i):
+    return jnp.uint32(0), jnp.uint32(i)
+
+
+class TestTick:
+    def test_tick_adds_k_increments(self):
+        c = bc.zeros(64, k=3)
+        c = bc.tick(c, *_ev(7))
+        assert float(bc.clock_sum(c)) == 3.0
+
+    def test_tick_batch_of_events(self):
+        c = bc.zeros(64, k=4)
+        hi = jnp.zeros((5,), jnp.uint32)
+        lo = jnp.arange(5, dtype=jnp.uint32)
+        c = bc.tick(c, hi, lo)
+        assert float(bc.clock_sum(c)) == 20.0
+
+    def test_deterministic(self):
+        a = bc.tick(bc.zeros(128, k=4), *_ev(42))
+        b = bc.tick(bc.zeros(128, k=4), *_ev(42))
+        assert bool(jnp.all(a.cells == b.cells))
+
+    def test_different_events_differ(self):
+        a = bc.tick(bc.zeros(1024, k=4), *_ev(1))
+        b = bc.tick(bc.zeros(1024, k=4), *_ev(2))
+        assert not bool(jnp.all(a.cells == b.cells))
+
+
+class TestCompare:
+    def test_self_after_tick_is_ordered(self):
+        c0 = bc.tick(bc.zeros(64, k=3), *_ev(1))
+        c1 = bc.tick(c0, *_ev(2))
+        o = bc.compare(c0, c1)
+        assert bool(o.a_le_b) and not bool(o.b_le_a) and not bool(o.concurrent)
+
+    def test_merge_dominates_both(self):
+        a = bc.tick(bc.zeros(64, k=3), *_ev(1))
+        b = bc.tick(bc.zeros(64, k=3), *_ev(2))
+        m = bc.merge(a, b)
+        assert bool(bc.compare(a, m).a_le_b)
+        assert bool(bc.compare(b, m).a_le_b)
+
+    def test_equal(self):
+        a = bc.tick(bc.zeros(64, k=3), *_ev(9))
+        o = bc.compare(a, a)
+        assert bool(o.equal) and bool(o.a_le_b) and bool(o.b_le_a)
+
+
+class TestEq3:
+    def test_paper_worked_example(self):
+        """Paper §3: m=6, ΣB=10, ΣA=7 -> (1-(1-1/6)^10)^7 = 0.29."""
+        fp = float(bc.fp_rate(7, 10, 6))
+        assert fp == pytest.approx(0.2914, abs=1e-3)
+
+    def test_monotone_in_gap(self):
+        """Larger ΣB - ΣA gap -> larger fp (paper Eq. 2 intuition)."""
+        fps = [float(bc.fp_rate(10, 10 + g, 64)) for g in (0, 10, 100, 1000)]
+        assert fps == sorted(fps)
+
+    def test_stable_at_huge_sums(self):
+        fp = float(bc.fp_rate(1e8, 1e9, 1024))
+        assert 0.0 <= fp <= 1.0 and np.isfinite(fp)
+
+    def test_zero_sums(self):
+        assert float(bc.fp_rate(0, 0, 64)) == pytest.approx(1.0)
+        # empty A trivially "inside" any B -> fp = 1 (claim carries no info)
+        assert float(bc.fp_rate(0, 100, 64)) == pytest.approx(1.0)
+
+
+class TestCompression:
+    def test_paper_section4_example(self):
+        """[4,3,3,5,7,4,3,3,5] -> (3)[1,0,0,2,4,1,0,0,2]."""
+        cells = jnp.asarray([4, 3, 3, 5, 7, 4, 3, 3, 5], jnp.int32)
+        c = bc.BloomClock(cells=cells, base=jnp.int32(0), k=3)
+        z = bc.compress(c)
+        assert int(z.base) == 3
+        assert z.cells.tolist() == [1, 0, 0, 2, 4, 1, 0, 0, 2]
+
+    def test_compress_preserves_semantics(self):
+        c = bc.zeros(16, k=4)
+        for i in range(20):
+            c = bc.tick(c, *_ev(i))
+        z = bc.compress(c)
+        assert bool(jnp.all(z.logical_cells() == c.logical_cells()))
+        assert float(bc.clock_sum(z)) == float(bc.clock_sum(c))
+        d = bc.decompress(z)
+        assert bool(jnp.all(d.cells == c.logical_cells()))
+
+    def test_merge_after_compress(self):
+        a = bc.zeros(16, k=4)
+        b = bc.zeros(16, k=4)
+        for i in range(10):
+            a = bc.tick(a, *_ev(i))
+            b = bc.tick(b, *_ev(i + 100))
+        m1 = bc.merge(a, b)
+        m2 = bc.merge(bc.compress(a), bc.compress(b))
+        assert bool(jnp.all(m1.logical_cells() == m2.logical_cells()))
+
+
+class TestVectorClockBaseline:
+    def test_ordering(self):
+        a = vc.zeros(4)
+        a = vc.tick(a, 0)
+        b = vc.merge(a, vc.tick(vc.zeros(4), 1))
+        b = vc.tick(b, 1)
+        o = vc.compare(a, b)
+        assert bool(o.a_le_b) and not bool(o.b_le_a)
+
+    def test_concurrent(self):
+        a = vc.tick(vc.zeros(4), 0)
+        b = vc.tick(vc.zeros(4), 1)
+        assert bool(vc.compare(a, b).concurrent)
+
+    def test_space_scaling(self):
+        """§2/§4: vector O(N) vs bloom O(m) wire size."""
+        assert vc.wire_bytes(10_000) > 16 * vc.wire_bytes(100)
+        m = 1024  # bloom stays constant
+        assert m * 4 == 4096
+
+
+class TestHashing:
+    def test_indices_in_range(self):
+        idx = bloom_indices(jnp.uint32(123), jnp.uint32(456), 8, 100)
+        assert idx.shape == (8,)
+        assert bool(jnp.all(idx < 100))
+
+    def test_uniformity(self):
+        n = 20_000
+        hi = jnp.zeros((n,), jnp.uint32)
+        lo = jnp.arange(n, dtype=jnp.uint32)
+        idx = np.asarray(bloom_indices(hi, lo, 4, 64)).reshape(-1)
+        counts = np.bincount(idx, minlength=64)
+        expect = n * 4 / 64
+        # chi-square-ish sanity: all bins within 10% of uniform
+        assert np.all(np.abs(counts - expect) < 0.1 * expect)
+
+    def test_stable_event_id_deterministic(self):
+        assert stable_event_id("a", 1) == stable_event_id("a", 1)
+        assert stable_event_id("a", 1) != stable_event_id("a", 2)
+        assert stable_event_id(b"xy") != stable_event_id("yx")
+
+
+class TestHistory:
+    def test_closest_predecessor_refines_fp(self):
+        """§3: comparing against the closest dominating timestamp gives a
+        smaller fp than against the newest."""
+        from repro.core import history as hist
+
+        c = bc.zeros(64, k=3)
+        h = hist.init(window=16, m=64, k=3)
+        snapshots = []
+        for i in range(12):
+            c = bc.tick(c, *_ev(i))
+            h = hist.push(h, c)
+            snapshots.append(c)
+        other = snapshots[2]  # an old timestamp another node holds
+        fp_newest = float(bc.compare(other, c).fp_a_before_b)
+        fp_best, idx = hist.best_predecessor_fp(h, other)
+        assert float(fp_best) <= fp_newest
+        assert float(fp_best) < 1.0
