@@ -1,0 +1,139 @@
+"""Fleet-subsystem benchmarks: bulk classification vs the broadcast path.
+
+Three claims, each (name, us_per_call, derived) CSV rows like bench_clock:
+
+- **all-pairs**: the tiled Pallas matrix kernel (interpret mode on CPU,
+  compiled on TPU) vs ``repro.core.clock.comparability_matrix``, the
+  eager O(n^2 * m) broadcast reference.  Checked bit-exact on flags and
+  to 1e-6 on Eq. 3 fp before timing; the acceptance config is n = m =
+  1024 (three ~4 GB broadcast intermediates for the reference vs a
+  streamed tile sweep for the kernel).
+- **classify-all**: one registry ``classify_all`` device call vs the
+  per-peer ``lineage`` loop the runtime used to run (one fused compare +
+  host sync per peer).
+- **gossip round**: full anti-entropy rounds/second over the registry.
+
+``python -m benchmarks.bench_fleet`` runs the full acceptance config;
+``all_benches()`` (used by benchmarks/run.py) runs a smaller sweep.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clock as bc
+from repro.fleet import ClockRegistry, GossipConfig, fleet_health, gossip_round
+from repro.kernels import ops
+
+
+def _rand_cells(n: int, m: int, seed: int = 0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 30, (n, m)), jnp.int32)
+
+
+def _time(fn, n: int = 3) -> float:
+    fn()                                   # warm / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(jax.tree.leaves(fn()))
+    return (time.perf_counter() - t0) / n
+
+
+def bench_all_pairs(n: int = 1024, m: int = 1024, verify: bool = True) -> list:
+    """Tiled matrix kernel vs broadcast reference: correctness + speedup."""
+    rows = []
+    cells = _rand_cells(n, m)
+    clocks = bc.BloomClock(cells, jnp.zeros((n,), jnp.int32), 4)
+
+    if verify:
+        got = jax.device_get(ops.compare_matrix(cells, cells))
+        ref = jax.device_get(bc.comparability_matrix(clocks))
+        flags_exact = bool(
+            np.array_equal(got["a_le_b"], ref["a_le_b"])
+            and np.array_equal(got["concurrent"], ref["concurrent"]))
+        fp_err = float(np.max(np.abs(got["fp"] - ref["fp"])))
+        rows.append((f"matrix_kernel_verify_n{n}_m{m}", 0.0,
+                     f"flags_exact={flags_exact} max_fp_err={fp_err:.2e}"))
+        assert flags_exact and fp_err <= 1e-6, (flags_exact, fp_err)
+
+    t_kernel = _time(lambda: ops.compare_matrix(cells, cells))
+    t_ref = _time(lambda: bc.comparability_matrix(clocks), n=1)
+    rows.append((f"matrix_kernel_n{n}_m{m}", t_kernel * 1e6,
+                 f"{n * n / t_kernel / 1e6:.1f} Mpairs/s"))
+    rows.append((f"broadcast_reference_n{n}_m{m}", t_ref * 1e6,
+                 f"{n * n / t_ref / 1e6:.1f} Mpairs/s"))
+    rows.append((f"matrix_speedup_n{n}_m{m}", 0.0,
+                 f"kernel_over_broadcast={t_ref / t_kernel:.1f}x (need >=5x)"))
+    return rows
+
+
+def _filled_registry(n: int, m: int, seed: int = 0) -> ClockRegistry:
+    registry = ClockRegistry(capacity=n, m=m, k=4)
+    cells = np.asarray(_rand_cells(n, m, seed))
+    registry.admit_many({
+        f"peer{i}": bc.BloomClock(jnp.asarray(cells[i]),
+                                  jnp.zeros((), jnp.int32), 4)
+        for i in range(n)})
+    return registry
+
+
+def bench_classify_all(n: int = 1024, m: int = 1024) -> list:
+    """One fused classify_all call vs the per-peer lineage loop."""
+    from repro.runtime.clock_runtime import ClockConfig, ClockRuntime
+
+    rows = []
+    registry = _filled_registry(n, m)
+    rt = ClockRuntime(ClockConfig(m=m, k=4))
+    rt.clock = registry.get("peer0")
+
+    t_fleet = _time(lambda: registry.classify_all(rt.clock))
+    rows.append((f"classify_all_n{n}_m{m}", t_fleet * 1e6,
+                 f"{n / t_fleet / 1e3:.1f} Kpeers/s one device call"))
+
+    def loop(k_peers: int = 64):
+        return [rt.lineage(registry.get(f"peer{i}")) for i in range(k_peers)]
+
+    t_loop = _time(loop, n=1) / 64 * n     # extrapolated to n peers
+    rows.append((f"lineage_loop_n{n}_m{m}", t_loop * 1e6,
+                 f"extrapolated from 64 peers; {t_loop / t_fleet:.1f}x slower"))
+    return rows
+
+
+def bench_gossip(n: int = 1024, m: int = 1024) -> list:
+    rows = []
+    registry = _filled_registry(n, m)
+    local = registry.get("peer0")
+    cfg = GossipConfig(fp_threshold=1.0, push_back=False)
+    t = _time(lambda: gossip_round(registry, local, cfg)[0].cells)
+    rows.append((f"gossip_round_n{n}_m{m}", t * 1e6,
+                 f"{1.0 / t:.2f} rounds/s full classify+merge"))
+    t_h = _time(lambda: fleet_health(registry).n_components, n=1)
+    rows.append((f"fleet_health_n{n}_m{m}", t_h * 1e6,
+                 "all-pairs + fork components + fp histogram"))
+    return rows
+
+
+def all_benches() -> list:
+    """Smaller sweep for benchmarks/run.py (the full acceptance config
+    runs via ``python -m benchmarks.bench_fleet``)."""
+    rows = []
+    rows += bench_all_pairs(n=256, m=512)
+    rows += bench_classify_all(n=256, m=512)
+    rows += bench_gossip(n=256, m=512)
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in (
+            bench_all_pairs(n=1024, m=1024)
+            + bench_classify_all(n=1024, m=1024)
+            + bench_gossip(n=1024, m=1024)):
+        print(f'{name},{us:.2f},"{derived}"')
+
+
+if __name__ == "__main__":
+    main()

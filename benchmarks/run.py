@@ -12,9 +12,10 @@ import os
 
 def main() -> None:
     from benchmarks.bench_clock import all_benches
+    from benchmarks.bench_fleet import all_benches as fleet_benches
 
     print("name,us_per_call,derived")
-    for name, us, derived in all_benches():
+    for name, us, derived in all_benches() + fleet_benches():
         print(f'{name},{us:.2f},"{derived}"')
 
     path = os.path.join(os.path.dirname(__file__), "..", "reports",

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from repro.core import clock as bc
 from repro.core.hashing import bloom_indices
 
-__all__ = ["SimConfig", "SimResult", "run_sim"]
+__all__ = ["SimConfig", "SimResult", "run_sim",
+           "GossipSimResult", "run_gossip_sim"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,30 +66,35 @@ class SimResult:
         )
 
 
-def run_sim(cfg: SimConfig) -> SimResult:
-    rng = np.random.default_rng(cfg.seed)
-    n, m, k = cfg.n_nodes, cfg.m, cfg.k
-
-    # ---- precompute bloom indices for every event id with the jnp hasher ----
+def _event_probe_indices(cfg: SimConfig) -> np.ndarray:
+    """Bloom indices for every event id, via the same jnp hasher the
+    runtime uses.  [n_events, k]."""
     ev_ids = np.arange(cfg.n_events, dtype=np.uint64)
-    idx = np.asarray(
+    return np.asarray(
         bloom_indices(
             jnp.asarray((ev_ids >> np.uint64(32)).astype(np.uint32)),
             jnp.asarray((ev_ids & np.uint64(0xFFFFFFFF)).astype(np.uint32)),
-            k,
-            m,
+            cfg.k,
+            cfg.m,
         )
-    )  # [n_events, k]
+    )
 
-    # ---- replay ----
-    bloom = np.zeros((n, m), np.int64)
+
+def _replay(cfg: SimConfig, rng: np.random.Generator, idx: np.ndarray):
+    """Shared protocol-event generator for both sims.
+
+    Yields (t, src, bloom [n, m], vec [n, n]) after each event commits
+    (deliveries applied, src ticked, broadcasts enqueued).  The yielded
+    arrays are the LIVE state: consumers may mutate them between events
+    (e.g. gossip merges) and the mutation takes effect from the next
+    event on — snapshots already in flight are unaffected, like real
+    messages on the wire.
+    """
+    n = cfg.n_nodes
+    bloom = np.zeros((n, cfg.m), np.int64)
     vec = np.zeros((n, n), np.int64)
     # in-flight messages: (deliver_slot, dst, bloom_snapshot, vec_snapshot)
     inflight: list[tuple[int, int, np.ndarray, np.ndarray]] = []
-
-    # per-event records for scoring
-    ev_bloom = np.zeros((cfg.n_events, m), np.int64)
-    ev_vec = np.zeros((cfg.n_events, n), np.int64)
 
     for t in range(cfg.n_events):
         # deliver due messages first (receive = merge, §3 step 3)
@@ -102,8 +108,6 @@ def run_sim(cfg: SimConfig) -> SimResult:
         # the event itself: bloom ticks k cells, vector ticks own slot
         np.add.at(bloom[src], idx[t], 1)
         vec[src, src] += 1
-        ev_bloom[t] = bloom[src]
-        ev_vec[t] = vec[src]
 
         if rng.random() < cfg.p_broadcast:
             for dst in range(n):
@@ -111,6 +115,21 @@ def run_sim(cfg: SimConfig) -> SimResult:
                     continue
                 delay = 1 + rng.integers(cfg.max_delay)
                 inflight.append((t + delay, dst, bloom[src].copy(), vec[src].copy()))
+
+        yield t, src, bloom, vec
+
+
+def run_sim(cfg: SimConfig) -> SimResult:
+    rng = np.random.default_rng(cfg.seed)
+    n, m = cfg.n_nodes, cfg.m
+    idx = _event_probe_indices(cfg)
+
+    # per-event records for scoring
+    ev_bloom = np.zeros((cfg.n_events, m), np.int64)
+    ev_vec = np.zeros((cfg.n_events, n), np.int64)
+    for t, src, bloom, vec in _replay(cfg, rng, idx):
+        ev_bloom[t] = bloom[src]
+        ev_vec[t] = vec[src]
 
     # ---- score sampled pairs ----
     pa = rng.integers(cfg.n_events, size=cfg.sample_pairs)
@@ -158,6 +177,136 @@ def run_sim(cfg: SimConfig) -> SimResult:
         bloom_wire_bytes=m * 4,
         vector_wire_bytes=n * 4,
         n_pairs_scored=int(pa.size),
+    )
+
+
+@dataclasses.dataclass
+class GossipSimResult:
+    """Score of fleet gossip rounds against vector-clock ground truth."""
+
+    rounds: int
+    false_negatives: int      # truth-ordered peers the fleet called FORKED (must be 0)
+    claims: int               # ordered/equal verdicts issued across rounds
+    false_positives: int      # claims the vector clocks contradict
+    measured_fp_rate: float
+    mean_predicted_fp: float  # mean Eq. 3 fp over the issued claims
+    within_eq3_band: bool     # measured consistent with predicted (monitor.fp_within_band)
+    merges: int               # peers actually merged across rounds
+    quarantines: int          # FORKED verdicts (all truth-concurrent when fn == 0)
+
+    def summary(self) -> str:
+        return (
+            f"rounds={self.rounds} fn={self.false_negatives} "
+            f"claims={self.claims} fp={self.false_positives} "
+            f"measured_fp={self.measured_fp_rate:.4f} "
+            f"predicted_fp={self.mean_predicted_fp:.4f} "
+            f"band_ok={self.within_eq3_band} merges={self.merges} "
+            f"quarantines={self.quarantines}"
+        )
+
+
+def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
+                   gossip_cfg=None) -> GossipSimResult:
+    """Replay a random execution and interleave REAL fleet gossip rounds,
+    scoring every verdict against the exact vector-clock truth.
+
+    Between bursts of ordinary protocol events (same generator as
+    ``run_sim``), the observer node runs ``fleet.gossip_round`` over a
+    ``ClockRegistry`` holding every other node's current clock.  Each
+    round's classification is audited:
+
+    - a FORKED verdict for a truth-ordered peer is a false negative —
+      the paper's §3 guarantee says this can NEVER happen;
+    - ordered/equal verdicts the vector clocks contradict are false
+      positives, whose measured rate must sit within the Eq. 3 band;
+    - accepted merges are applied to BOTH clock families (receive rule),
+      so causality stays aligned across rounds, including the
+      anti-entropy push-back to accepted peers.
+    """
+    from repro.fleet import gossip as fg
+    from repro.fleet import monitor as fm
+    from repro.fleet import registry as fr
+
+    if gossip_cfg is None:
+        fg_cfg = fg.GossipConfig(fp_threshold=1.0, straggler_gap=np.inf)
+    else:
+        fg_cfg = gossip_cfg
+    rng = np.random.default_rng(cfg.seed)
+    n, m, k = cfg.n_nodes, cfg.m, cfg.k
+    idx = _event_probe_indices(cfg)
+
+    registry = fr.ClockRegistry(capacity=max(8, n), m=m, k=k)
+    peers = [p for p in range(n) if p != observer]
+
+    def as_clock(cells_row: np.ndarray) -> bc.BloomClock:
+        return bc.BloomClock(
+            cells=jnp.asarray(cells_row, jnp.int32),
+            base=jnp.zeros((), jnp.int32), k=k)
+
+    fn = fp_count = claims = merges = quarantines = 0
+    predicted: list[float] = []
+    round_marks = set(
+        np.linspace(cfg.n_events // max(n_rounds, 1), cfg.n_events - 1,
+                    n_rounds, dtype=int).tolist())
+    rounds_done = 0
+
+    for t, _src, bloom, vec in _replay(cfg, rng, idx):
+        if t not in round_marks:
+            continue
+
+        # ---- one audited gossip round at the observer ----
+        rounds_done += 1
+        registry.admit_many({p: as_clock(bloom[p]) for p in peers})
+        local = as_clock(bloom[observer])
+        merged, report = fg.gossip_round(registry, local, fg_cfg)
+
+        vo = vec[observer]
+        for p in peers:
+            s = registry.slot_of(p)
+            code = int(report.view.status[s])
+            p_le_o = bool(np.all(vec[p] <= vo))
+            o_le_p = bool(np.all(vo <= vec[p]))
+            if code == fr.FORKED:
+                quarantines += 1
+                if p_le_o or o_le_p:
+                    fn += 1          # §3 violation: can never happen
+                continue
+            claims += 1
+            predicted.append(float(report.view.fp[s]))
+            truth_ok = {
+                fr.ANCESTOR: p_le_o,
+                fr.SAME: p_le_o and o_le_p,
+                fr.DESCENDANT: o_le_p,
+            }[code]
+            if not truth_ok:
+                fp_count += 1
+
+        # commit the round to BOTH clock families (receive rule)
+        accept_ids = [p for p in peers if report.accepted[registry.slot_of(p)]]
+        merges += len(accept_ids)
+        if accept_ids:
+            union_vec = vo.copy()
+            for p in accept_ids:
+                np.maximum(union_vec, vec[p], out=union_vec)
+            bloom[observer] = np.asarray(merged.logical_cells(), np.int64)
+            vec[observer] = union_vec
+            if fg_cfg.push_back:
+                for p in accept_ids:
+                    bloom[p] = np.asarray(merged.logical_cells(), np.int64)
+                    vec[p] = union_vec.copy()
+
+    measured = fp_count / max(claims, 1)
+    mean_pred = float(np.mean(predicted)) if predicted else 0.0
+    return GossipSimResult(
+        rounds=rounds_done,
+        false_negatives=fn,
+        claims=claims,
+        false_positives=fp_count,
+        measured_fp_rate=measured,
+        mean_predicted_fp=mean_pred,
+        within_eq3_band=fm.fp_within_band(measured, mean_pred),
+        merges=merges,
+        quarantines=quarantines,
     )
 
 

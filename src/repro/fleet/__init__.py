@@ -1,0 +1,40 @@
+"""Fleet causality subsystem: bulk bloom-clock tracking for whole fleets.
+
+The paper's O(m) comparison only pays off when the machinery around it
+is batch-oriented.  This package provides that machinery:
+
+- ``registry``  — fixed-capacity slab of peer clocks with batched
+  admit/evict/update and a single-device-call ``classify_all``;
+- ``gossip``    — anti-entropy rounds over the registry (batched merge,
+  fork quarantine, straggler skipping);
+- ``monitor``   — fleet health views built on the tiled all-pairs
+  Pallas kernel (fork components, stragglers, fp histograms).
+"""
+from repro.fleet.registry import (
+    ANCESTOR,
+    DEAD,
+    DESCENDANT,
+    FORKED,
+    SAME,
+    STATUS_NAMES,
+    ClockRegistry,
+    FleetView,
+)
+from repro.fleet.gossip import GossipConfig, GossipReport, gossip_round
+from repro.fleet.monitor import FleetHealth, fleet_health
+
+__all__ = [
+    "ClockRegistry",
+    "FleetView",
+    "GossipConfig",
+    "GossipReport",
+    "gossip_round",
+    "FleetHealth",
+    "fleet_health",
+    "ANCESTOR",
+    "SAME",
+    "DESCENDANT",
+    "FORKED",
+    "DEAD",
+    "STATUS_NAMES",
+]

@@ -1,0 +1,102 @@
+"""Anti-entropy gossip rounds over a ClockRegistry.
+
+One round = what a node does when it wakes up and reconciles with its
+view of the fleet, driven end-to-end by the fused kernels (no per-peer
+Python on the hot path):
+
+1. ``classify_all``: one device call classifies every peer against the
+   local clock (lineage + Eq. 3 confidence).
+2. policy, on [N] host vectors: FORKED peers are quarantined (their
+   events diverged from ours — merging would launder a causality
+   violation); stragglers (clock-sum gap above ``straggler_gap`` below
+   the alive median) are skipped this round, not quarantined; remaining
+   comparable peers with fp within ``fp_threshold`` are accepted.
+3. one batched ``union`` merges the local clock with every accepted row
+   (paper §3 receive rule, applied fleet-wide in a single max-reduce).
+4. optional push-back: the merged union is broadcast into the accepted
+   rows, modelling the outbound half of anti-entropy — after a round the
+   accepted peers' registry rows equal the union, so a skipped straggler
+   that later syncs catches up instead of lagging forever.
+
+The whole round costs O(N * m / lanes) device work and exactly two
+host<->device transfers (the view fetch and the merged clock),
+independent of how many peers are accepted.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import clock as bc
+from repro.fleet import registry as reg
+
+__all__ = ["GossipConfig", "GossipReport", "gossip_round"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipConfig:
+    fp_threshold: float = 1e-4    # Eq. 3 confidence gate for merges
+    straggler_gap: float = 64.0   # clock-sum ticks below alive median
+    push_back: bool = True        # write the union into accepted rows
+
+
+@dataclasses.dataclass
+class GossipReport:
+    """Outcome masks of one round (numpy, [capacity])."""
+
+    accepted: np.ndarray          # merged this round
+    quarantined: np.ndarray       # FORKED -> excluded until resolved
+    stragglers: np.ndarray        # skipped this round (not quarantined)
+    unconfident: np.ndarray       # comparable but fp above threshold
+    view: reg.FleetView           # the classification the round acted on
+
+    @property
+    def n_accepted(self) -> int:
+        return int(self.accepted.sum())
+
+    def summary(self) -> str:
+        return (
+            f"accepted={int(self.accepted.sum())} "
+            f"quarantined={int(self.quarantined.sum())} "
+            f"stragglers={int(self.stragglers.sum())} "
+            f"unconfident={int(self.unconfident.sum())} "
+            f"alive={int(self.view.alive.sum())}"
+        )
+
+
+def gossip_round(
+    registry: reg.ClockRegistry,
+    local: bc.BloomClock,
+    cfg: GossipConfig = GossipConfig(),
+) -> tuple[bc.BloomClock, GossipReport]:
+    """Run one anti-entropy round; returns (merged local clock, report)."""
+    view = registry.classify_all(local)
+    alive = view.alive
+
+    quarantined = alive & (view.status == reg.FORKED)
+
+    stragglers = np.zeros_like(alive)
+    if alive.any():
+        med = float(np.median(view.sums[alive]))
+        stragglers = alive & ~quarantined & (
+            (med - view.sums) > cfg.straggler_gap)
+
+    comparable = alive & ~quarantined & ~stragglers
+    unconfident = comparable & (view.fp > cfg.fp_threshold)
+    accepted = comparable & ~unconfident
+
+    merged = local
+    if accepted.any():
+        merged = registry.union(accepted, local)
+        merged = bc.compress(merged)
+        if cfg.push_back:
+            registry.broadcast(accepted, merged)
+
+    return merged, GossipReport(
+        accepted=accepted,
+        quarantined=quarantined,
+        stragglers=stragglers,
+        unconfident=unconfident,
+        view=view,
+    )

@@ -1,0 +1,133 @@
+"""Fleet health views built on the tiled all-pairs Pallas kernel.
+
+``fleet_health`` runs ONE ``compare_matrix`` call over the registry slab
+and derives, on host numpy:
+
+- **fork components**: connected components of the comparability graph
+  (peers i, j connected iff their clocks are ordered either way).  A
+  healthy fleet is one component; every extra component is a fork —
+  a set of peers whose causal histories have diverged from the rest.
+- **straggler mask**: alive peers whose clock sum lags the alive median
+  by more than ``straggler_gap`` (clock sums are monotone progress
+  counters).
+- **predicted-fp histogram**: log10-binned Eq. 3 fp over the ordered
+  pairs — the fleet's claimed-order confidence profile.  Validation
+  against a MEASURED rate needs ground truth the monitor does not have;
+  the simulator supplies it (``repro.core.sim.run_gossip_sim``) and
+  ``fp_within_band`` is the shared check.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.fleet.registry import ClockRegistry
+
+__all__ = ["FleetHealth", "fleet_health", "fork_components", "fp_within_band"]
+
+
+@dataclasses.dataclass
+class FleetHealth:
+    n_alive: int
+    comparable_fraction: float    # ordered pairs / alive pairs
+    component: np.ndarray         # [capacity] component label, -1 for dead
+    n_components: int             # fork count: healthy == 1 (or 0 if empty)
+    straggler_mask: np.ndarray    # [capacity] bool
+    sums: np.ndarray              # [capacity] float32 clock sums
+    fp_hist: np.ndarray           # counts per log10-fp bin (ordered pairs)
+    fp_bin_edges: np.ndarray      # len(fp_hist) + 1 edges, log10(fp)
+    mean_predicted_fp: float      # mean Eq. 3 fp over ordered pairs
+
+    def summary(self) -> str:
+        return (
+            f"alive={self.n_alive} components={self.n_components} "
+            f"comparable={self.comparable_fraction:.3f} "
+            f"stragglers={int(self.straggler_mask.sum())} "
+            f"mean_pred_fp={self.mean_predicted_fp:.3e}"
+        )
+
+
+def fork_components(comparable: np.ndarray, alive: np.ndarray) -> tuple[np.ndarray, int]:
+    """Union-find over the comparability graph.  Returns (labels, count);
+    dead slots get label -1."""
+    n = comparable.shape[0]
+    parent = np.arange(n)
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    ii, jj = np.nonzero(comparable & alive[:, None] & alive[None, :])
+    for i, j in zip(ii.tolist(), jj.tolist()):
+        ri, rj = find(i), find(j)
+        if ri != rj:
+            parent[ri] = rj
+
+    labels = np.full(n, -1, np.int64)
+    roots: dict[int, int] = {}
+    for i in np.flatnonzero(alive):
+        r = find(int(i))
+        labels[i] = roots.setdefault(r, len(roots))
+    return labels, len(roots)
+
+
+def fp_within_band(measured_fp: float, mean_predicted_fp: float,
+                   slack: float = 3.0, abs_tol: float = 0.01) -> bool:
+    """Is a measured false-positive rate consistent with the Eq. 3
+    prediction?  Eq. 3 is an independence approximation, so we accept a
+    multiplicative slack plus an absolute floor for small samples."""
+    return measured_fp <= mean_predicted_fp * slack + abs_tol
+
+
+def fleet_health(
+    registry: ClockRegistry,
+    *,
+    straggler_gap: float = 64.0,
+    fp_bins: int = 12,
+    **matrix_kw,
+) -> FleetHealth:
+    """One all-pairs kernel call -> full fleet health snapshot."""
+    mats = registry.all_pairs(**matrix_kw)
+    h = jax.device_get(mats)
+    alive = np.asarray(registry.alive)
+    n_alive = int(alive.sum())
+
+    le = h["a_le_b"]
+    ge = h["b_le_a"]
+    comparable = (le | ge)
+    np.fill_diagonal(comparable, False)
+
+    pair_mask = alive[:, None] & alive[None, :]
+    np.fill_diagonal(pair_mask, False)
+    n_pairs = int(pair_mask.sum())
+    n_ordered = int((comparable & pair_mask).sum())
+
+    labels, n_components = fork_components(comparable, alive)
+
+    sums = h["row_sums"]
+    straggler = np.zeros_like(alive)
+    if n_alive:
+        med = float(np.median(sums[alive]))
+        straggler = alive & ((med - sums) > straggler_gap)
+
+    # ordered (strict) claims row->col: dominance holds and clocks differ
+    strict = le & ~(le & ge) & pair_mask
+    fps = h["fp"][strict]
+    edges = np.linspace(-30.0, 0.0, fp_bins + 1)
+    hist, _ = np.histogram(np.log10(np.clip(fps, 1e-30, 1.0)), bins=edges)
+
+    return FleetHealth(
+        n_alive=n_alive,
+        comparable_fraction=n_ordered / max(n_pairs, 1),
+        component=labels,
+        n_components=n_components,
+        straggler_mask=straggler,
+        sums=sums,
+        fp_hist=hist,
+        fp_bin_edges=edges,
+        mean_predicted_fp=float(fps.mean()) if fps.size else 0.0,
+    )

@@ -1,0 +1,233 @@
+"""ClockRegistry: a fixed-capacity slab of peer bloom clocks.
+
+The registry is the fleet-scale replacement for holding one
+``BloomClock`` object per peer and comparing them one ``bool()`` at a
+time.  All peer state lives in three device arrays:
+
+    cells [N, m] int32   logical cells per slot (decompressed)
+    sums  [N]    float32 cached total increments (Eq. 3 inputs)
+    alive [N]    bool    liveness mask (evicted slots stay allocated)
+
+Slot assignment is host-side (a dict + free list); everything that
+touches cell data is batched: ``admit_many`` / ``update_many`` are one
+scatter each, ``classify_all`` is ONE device call through the fused
+one-vs-many Pallas kernel and returns lineage status + Eq. 3 fp for
+every slot, ``all_pairs`` runs the tiled N x N kernel.
+
+Status codes (``FleetView.status``) are small ints so a whole fleet's
+classification is a single int8 vector:
+
+    DEAD < 0: slot empty/evicted;  ANCESTOR: peer ≼ local;
+    SAME: equal;  DESCENDANT: local ≼ peer;  FORKED: concurrent
+    (exact — no false negatives, paper §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clock as bc
+from repro.kernels import ops
+
+__all__ = [
+    "ClockRegistry",
+    "FleetView",
+    "DEAD",
+    "ANCESTOR",
+    "SAME",
+    "DESCENDANT",
+    "FORKED",
+    "STATUS_NAMES",
+]
+
+DEAD = -1
+ANCESTOR = 0
+SAME = 1
+DESCENDANT = 2
+FORKED = 3
+
+STATUS_NAMES = {
+    DEAD: "dead",
+    ANCESTOR: "ancestor",
+    SAME: "same",
+    DESCENDANT: "descendant",
+    FORKED: "forked",
+}
+
+
+@dataclasses.dataclass
+class FleetView:
+    """Host-side result of one ``classify_all`` call (numpy, [capacity])."""
+
+    status: np.ndarray        # int8 status code per slot
+    fp: np.ndarray            # float32 Eq. 3 fp of the claimed direction
+    sums: np.ndarray          # float32 cached clock sums
+    alive: np.ndarray         # bool liveness mask
+    local_sum: float          # the query clock's total increments
+
+    def slots(self, code: int) -> np.ndarray:
+        return np.flatnonzero(self.status == code)
+
+    def counts(self) -> dict[str, int]:
+        return {
+            name: int(np.sum(self.status == code))
+            for code, name in STATUS_NAMES.items()
+        }
+
+
+@jax.jit
+def _scatter_rows(cells, sums, alive, idx, new_cells, new_sums):
+    cells = cells.at[idx].set(new_cells)
+    sums = sums.at[idx].set(new_sums)
+    alive = alive.at[idx].set(True)
+    return cells, sums, alive
+
+
+@jax.jit
+def _union_rows(cells, mask, local_cells):
+    """max(local, max over masked rows); logical cells are >= 0 so the
+    masked-out fill of 0 is the identity."""
+    masked = jnp.where(mask[:, None], cells, 0)
+    return jnp.maximum(local_cells, jnp.max(masked, axis=0))
+
+
+@jax.jit
+def _broadcast_rows(cells, sums, mask, row, row_sum):
+    cells = jnp.where(mask[:, None], row[None, :], cells)
+    sums = jnp.where(mask, row_sum, sums)
+    return cells, sums
+
+
+class ClockRegistry:
+    """Sharded-slab peer clock registry (one shard = one device slab)."""
+
+    def __init__(self, capacity: int, m: int, k: int = 4):
+        self.capacity = capacity
+        self.m = m
+        self.k = k
+        self.cells = jnp.zeros((capacity, m), jnp.int32)
+        self.sums = jnp.zeros((capacity,), jnp.float32)
+        self.alive = jnp.zeros((capacity,), bool)
+        self._slot_of: dict = {}
+        self._free: list[int] = list(range(capacity - 1, -1, -1))
+
+    # ---- membership ----
+    def __len__(self) -> int:
+        return len(self._slot_of)
+
+    def __contains__(self, peer_id) -> bool:
+        return peer_id in self._slot_of
+
+    def slot_of(self, peer_id) -> int:
+        return self._slot_of[peer_id]
+
+    def peer_ids(self) -> list:
+        return list(self._slot_of)
+
+    # ---- batched mutation ----
+    def admit_many(self, peers: dict) -> dict:
+        """Admit {peer_id: BloomClock}; one scatter for the whole batch.
+
+        Re-admitting a known peer_id overwrites its row (re-spawned
+        peers keep their slot).  Returns {peer_id: slot}.  Raises when
+        capacity is exhausted.
+        """
+        if not peers:
+            return {}
+        fresh = [pid for pid in peers if pid not in self._slot_of]
+        if len(fresh) > len(self._free):
+            raise RuntimeError(
+                f"registry full: {len(fresh)} admits, {len(self._free)} free slots")
+        slots = {pid: (self._slot_of[pid] if pid in self._slot_of
+                       else self._free.pop()) for pid in peers}
+        self._slot_of.update(slots)
+        self._write(list(slots.values()), list(peers.values()))
+        return slots
+
+    def admit(self, peer_id, clock: bc.BloomClock) -> int:
+        return self.admit_many({peer_id: clock})[peer_id]
+
+    def update_many(self, peers: dict) -> None:
+        """Overwrite existing peers' rows; one scatter for the batch."""
+        if not peers:
+            return
+        self._write([self._slot_of[pid] for pid in peers], list(peers.values()))
+
+    def update(self, peer_id, clock: bc.BloomClock) -> None:
+        self.update_many({peer_id: clock})
+
+    def evict_many(self, peer_ids) -> None:
+        idx = [self._slot_of.pop(pid) for pid in peer_ids]
+        if not idx:
+            return
+        self.alive = self.alive.at[jnp.asarray(idx)].set(False)
+        self._free.extend(idx)
+
+    def evict(self, peer_id) -> None:
+        self.evict_many([peer_id])
+
+    def _write(self, idx: list, clocks: list) -> None:
+        new_cells = jnp.stack([c.logical_cells().astype(jnp.int32) for c in clocks])
+        new_sums = jnp.stack([bc.clock_sum(c) for c in clocks])
+        self.cells, self.sums, self.alive = _scatter_rows(
+            self.cells, self.sums, self.alive, jnp.asarray(idx), new_cells, new_sums)
+
+    def get(self, peer_id) -> bc.BloomClock:
+        row = self.cells[self._slot_of[peer_id]]
+        return bc.BloomClock(cells=row, base=jnp.zeros((), jnp.int32), k=self.k)
+
+    # ---- batched classification ----
+    def classify_all(self, local: bc.BloomClock) -> FleetView:
+        """Lineage status + Eq. 3 fp for EVERY slot in one device call.
+
+        Direction convention matches ``ClockRuntime.lineage``: a peer
+        that is ≼ the local clock is an ANCESTOR (its events are in the
+        local past), a peer the local clock is ≼ is a DESCENDANT, and
+        incomparable peers are FORKED (exact, §3).
+        """
+        out = ops.classify_vs_many(
+            local.logical_cells().astype(jnp.int32), self.cells)
+        h = jax.device_get(out)          # single host transfer for the dict
+        alive = np.asarray(self.alive)
+        p_le_q = h["p_le_q"]
+        q_le_p = h["q_le_p"]
+        equal = p_le_q & q_le_p
+        status = np.full(self.capacity, FORKED, np.int8)
+        status[p_le_q] = ANCESTOR
+        status[q_le_p] = DESCENDANT
+        status[equal] = SAME
+        status[~alive] = DEAD
+        # fp of the direction actually claimed; SAME and FORKED are exact
+        fp = np.where(p_le_q, h["fp_p_before_q"], h["fp_q_before_p"])
+        fp = np.where(equal | ~(p_le_q | q_le_p), 0.0, fp).astype(np.float32)
+        fp[~alive] = 0.0
+        return FleetView(
+            status=status,
+            fp=fp,
+            sums=h["sum_p"],
+            alive=alive,
+            local_sum=float(h["sum_q"]),
+        )
+
+    def all_pairs(self, **kw) -> dict:
+        """Tiled N x N compare over the whole slab (see ops.compare_matrix)."""
+        return ops.compare_matrix(self.cells, self.cells, **kw)
+
+    # ---- batched merge ----
+    def union(self, mask: np.ndarray, local: bc.BloomClock) -> bc.BloomClock:
+        """Merge the local clock with every masked row (one device call)."""
+        merged = _union_rows(
+            self.cells, jnp.asarray(mask, bool),
+            local.logical_cells().astype(jnp.int32))
+        return bc.BloomClock(
+            cells=merged, base=jnp.zeros((), jnp.int32), k=self.k)
+
+    def broadcast(self, mask: np.ndarray, clock: bc.BloomClock) -> None:
+        """Write one clock into every masked row (anti-entropy push-back)."""
+        row = clock.logical_cells().astype(jnp.int32)
+        self.cells, self.sums = _broadcast_rows(
+            self.cells, self.sums, jnp.asarray(mask, bool), row,
+            bc.clock_sum(clock))

@@ -1,0 +1,218 @@
+"""Pallas TPU kernels: bulk bloom-clock comparison (one-vs-many, N x N).
+
+The fleet layer (``repro.fleet``) never compares clocks one pair at a
+time: a gossip round classifies EVERY peer against the local clock, and
+the fleet monitor classifies EVERY pair.  Done with the broadcast
+reference (``repro.core.clock.comparability_matrix``) that is an
+O(n^2 * m) materialization — at n = m = 1024 that is three 4 GB
+intermediates for what is fundamentally a streaming reduction.  These
+kernels tile the reduction instead:
+
+``bloom_one_vs_many_kernel``
+    grid (N/bn, m/bm); compares one query clock against bn peers per
+    step.  Same revisited-output pattern as ``bloom_compare.py``:
+    dominance flags AND-accumulate and sums ADD-accumulate across
+    m-tiles into per-peer [bn, 2] outputs, and the Eq. 3 fp rates (both
+    directions) are finalized with log1p/expm1-stable math on the last
+    m-tile.  One HBM read of the peer slab total.
+
+``bloom_matrix_kernel``
+    grid (N/bi, M/bj, m/bm); tiled all-pairs compare.  Per step it holds
+    one [bi, bm] row tile and one [bj, bm] column tile in VMEM and
+    AND-accumulates the [bi, bj] dominance flags across m-tiles
+    (innermost grid axis -> consecutive revisits).  Row sums are
+    ADD-accumulated in-kernel on the j == 0 stripe only (the [bi, 1]
+    output block stays live for the whole i-row of the grid, so the
+    stripe completes before any finalize step of that row needs it).
+    Column sums cannot be accumulated the same way — their block would
+    be revisited non-consecutively across i — so they arrive as a cheap
+    precomputed input (the fleet registry caches per-clock sums
+    anyway).  Eq. 3 fp(row -> col) is finalized on the last m-tile as
+    the outer product of the stable-log factors.
+
+Both kernels read each operand tile exactly once; flags are exact
+(bit-identical to the reference), fp is the same f32 expression the
+reference evaluates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "bloom_one_vs_many_kernel",
+    "bloom_one_vs_many_pallas",
+    "bloom_matrix_kernel",
+    "bloom_matrix_pallas",
+]
+
+
+def bloom_one_vs_many_kernel(
+    q_ref, p_ref,
+    flags_ref, sums_ref, fp_ref,
+    *, n_mtiles: int, m: int,
+):
+    j = pl.program_id(1)
+    q = q_ref[...]            # [1, bm] int32 query tile (broadcasts over rows)
+    p = p_ref[...]            # [bn, bm] int32 peer tiles
+
+    le = jnp.all(q <= p, axis=1, keepdims=True)          # [bn, 1] q <= peer
+    ge = jnp.all(q >= p, axis=1, keepdims=True)          # [bn, 1] peer <= q
+    sp = jnp.sum(p, axis=1, keepdims=True).astype(jnp.float32)
+    sq = jnp.broadcast_to(
+        jnp.sum(q, axis=1, keepdims=True).astype(jnp.float32), sp.shape)
+
+    @pl.when(j == 0)
+    def _init():
+        flags_ref[...] = jnp.concatenate([le, ge], axis=1).astype(jnp.int32)
+        sums_ref[...] = jnp.concatenate([sq, sp], axis=1)
+
+    @pl.when(j > 0)
+    def _acc():
+        cur = jnp.concatenate([le, ge], axis=1).astype(jnp.int32)
+        flags_ref[...] = flags_ref[...] & cur
+        sums_ref[...] = sums_ref[...] + jnp.concatenate([sq, sp], axis=1)
+
+    @pl.when(j == n_mtiles - 1)
+    def _finalize():
+        s = sums_ref[...]                     # [bn, 2] total Σq, Σp
+        log_q = jnp.log1p(-1.0 / m)
+        inner_p = jnp.clip(-jnp.expm1(s[:, 1:2] * log_q), 1e-30, 1.0)
+        inner_q = jnp.clip(-jnp.expm1(s[:, 0:1] * log_q), 1e-30, 1.0)
+        fp_qp = jnp.exp(s[:, 0:1] * jnp.log(inner_p))   # P(q ⊆ p by chance)
+        fp_pq = jnp.exp(s[:, 1:2] * jnp.log(inner_q))
+        fp_ref[...] = jnp.concatenate([fp_qp, fp_pq], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "m_true", "interpret"))
+def bloom_one_vs_many_pallas(
+    q: jax.Array,        # [1, m] int32, padded: m % bm == 0
+    peers: jax.Array,    # [N, m] int32, N % bn == 0
+    *,
+    bn: int = 8,
+    bm: int = 512,
+    m_true: int | None = None,
+    interpret: bool = False,
+):
+    N, m = peers.shape
+    assert q.shape == (1, m) and m % bm == 0 and N % bn == 0
+    n_mtiles = m // bm
+    grid = (N // bn, n_mtiles)
+    kernel = functools.partial(
+        bloom_one_vs_many_kernel, n_mtiles=n_mtiles, m=m_true if m_true else m
+    )
+    flags, sums, fp = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm), lambda i, j: (0, j)),
+            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 2), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, 2), jnp.int32),
+            jax.ShapeDtypeStruct((N, 2), jnp.float32),
+            jax.ShapeDtypeStruct((N, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, peers)
+    return flags, sums, fp
+
+
+def bloom_matrix_kernel(
+    a_ref, b_ref, bsums_ref,
+    le_ref, ge_ref, asums_ref, fp_ref,
+    *, n_mtiles: int, m: int,
+):
+    j = pl.program_id(1)      # column-tile index
+    jm = pl.program_id(2)     # m-tile index (innermost -> revisits outputs)
+    a = a_ref[...]            # [bi, bm] int32 row clocks
+    b = b_ref[...]            # [bj, bm] int32 column clocks
+
+    # pairwise dominance on this m-tile: [bi, bj]
+    le = jnp.all(a[:, None, :] <= b[None, :, :], axis=2)
+    ge = jnp.all(a[:, None, :] >= b[None, :, :], axis=2)
+    sa = jnp.sum(a, axis=1, keepdims=True).astype(jnp.float32)  # [bi, 1]
+
+    # row sums: the (i, 0) block is live for the entire i-row of the grid,
+    # so add each m-tile exactly once (during the j == 0 stripe)
+    @pl.when(jnp.logical_and(j == 0, jm == 0))
+    def _init_sums():
+        asums_ref[...] = sa
+
+    @pl.when(jnp.logical_and(j == 0, jm > 0))
+    def _acc_sums():
+        asums_ref[...] = asums_ref[...] + sa
+
+    @pl.when(jm == 0)
+    def _init_flags():
+        le_ref[...] = le.astype(jnp.int32)
+        ge_ref[...] = ge.astype(jnp.int32)
+
+    @pl.when(jm > 0)
+    def _acc_flags():
+        le_ref[...] = le_ref[...] & le.astype(jnp.int32)
+        ge_ref[...] = ge_ref[...] & ge.astype(jnp.int32)
+
+    @pl.when(jm == n_mtiles - 1)
+    def _finalize():
+        sa_tot = asums_ref[...]               # [bi, 1] complete (see above)
+        sb_tot = bsums_ref[...]               # [1, bj] precomputed input
+        log_q = jnp.log1p(-1.0 / m)
+        inner_b = jnp.clip(-jnp.expm1(sb_tot * log_q), 1e-30, 1.0)  # [1, bj]
+        # Eq. 3 fp of "row i happened-before col j": outer product in log space
+        fp_ref[...] = jnp.exp(sa_tot * jnp.log(inner_b))            # [bi, bj]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bi", "bj", "bm", "m_true", "interpret"))
+def bloom_matrix_pallas(
+    rows: jax.Array,       # [N, m] int32, padded: N % bi == 0, m % bm == 0
+    cols: jax.Array,       # [M, m] int32, M % bj == 0
+    col_sums: jax.Array,   # [1, M] float32 total increments per column clock
+    *,
+    bi: int = 8,
+    bj: int = 128,
+    bm: int = 512,
+    m_true: int | None = None,
+    interpret: bool = False,
+):
+    N, m = rows.shape
+    M, mc = cols.shape
+    assert m == mc and col_sums.shape == (1, M)
+    assert N % bi == 0 and M % bj == 0 and m % bm == 0, (N, M, m, bi, bj, bm)
+    n_mtiles = m // bm
+    grid = (N // bi, M // bj, n_mtiles)
+    kernel = functools.partial(
+        bloom_matrix_kernel, n_mtiles=n_mtiles, m=m_true if m_true else m
+    )
+    le, ge, row_sums, fp = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, bm), lambda i, j, jm: (i, jm)),
+            pl.BlockSpec((bj, bm), lambda i, j, jm: (j, jm)),
+            pl.BlockSpec((1, bj), lambda i, j, jm: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bi, bj), lambda i, j, jm: (i, j)),
+            pl.BlockSpec((bi, bj), lambda i, j, jm: (i, j)),
+            pl.BlockSpec((bi, 1), lambda i, j, jm: (i, 0)),
+            pl.BlockSpec((bi, bj), lambda i, j, jm: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, M), jnp.int32),
+            jax.ShapeDtypeStruct((N, M), jnp.int32),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+            jax.ShapeDtypeStruct((N, M), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rows, cols, col_sums)
+    return le, ge, row_sums, fp

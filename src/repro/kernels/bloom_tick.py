@@ -39,8 +39,10 @@ def bloom_tick_kernel(probe_ref, cells_ref, out_ref, *, bm: int):
     cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (1, bm), 1)
     # [bb, P, bm]: does probe p hit column c of this tile?
     match = probes[:, :, None] == cols[None, :, :]
+    # accumulate in int32 regardless of cell dtype (16-bit cells would
+    # otherwise reject the mixed-dtype store), cast back on the way out
     inc = jnp.sum(match.astype(jnp.int32), axis=1)  # [bb, bm]
-    out_ref[...] = cells + inc
+    out_ref[...] = (cells.astype(jnp.int32) + inc).astype(cells.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bb", "bm", "interpret"))

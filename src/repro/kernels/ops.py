@@ -17,9 +17,20 @@ import jax.numpy as jnp
 
 from repro.core.hashing import bloom_indices
 from repro.kernels.bloom_compare import bloom_merge_compare_pallas
+from repro.kernels.bloom_matrix import (
+    bloom_matrix_pallas,
+    bloom_one_vs_many_pallas,
+)
 from repro.kernels.bloom_tick import bloom_tick_pallas
 
-__all__ = ["tick", "merge_compare", "pad_to", "pick_block"]
+__all__ = [
+    "tick",
+    "merge_compare",
+    "classify_vs_many",
+    "compare_matrix",
+    "pad_to",
+    "pick_block",
+]
 
 LANE = 128  # TPU lane width
 
@@ -109,4 +120,102 @@ def merge_compare(
         "sum_b": sums[:B, 1],
         "fp_a_before_b": fp[:B, 0],
         "fp_b_before_a": fp[:B, 1],
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
+def classify_vs_many(
+    q: jax.Array,            # [m] int32 local (query) logical cells
+    peers: jax.Array,        # [N, m] int32 peer slab logical cells
+    *,
+    bn: int = 8,
+    bm: int = 512,
+    interpret: bool | None = None,
+):
+    """One-vs-many fused classify: the local clock against a whole peer
+    slab in a single device call.
+
+    Returns dict with per-peer ``q_le_p`` / ``p_le_q`` dominance flags,
+    total sums and Eq. 3 fp rates both directions (fp of "q before p"
+    and "p before q").  Zero padding perturbs neither dominance nor
+    sums; Eq. 3 uses the TRUE m, passed statically to the kernel.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    (m,) = q.shape
+    N, mp_ = peers.shape
+    assert m == mp_, (q.shape, peers.shape)
+    q_p = pad_to(q[None, :], LANE, axis=1)
+    peers_p = pad_to(peers, LANE, axis=1)
+    mp = peers_p.shape[1]
+    bm_eff = pick_block(mp, bm)
+    bn_eff = min(bn, N) if N % min(bn, N) == 0 else math.gcd(N, bn)
+    peers_p = pad_to(peers_p, bn_eff, axis=0)
+    flags, sums, fp = bloom_one_vs_many_pallas(
+        q_p, peers_p, bn=bn_eff, bm=bm_eff, m_true=m, interpret=interpret
+    )
+    return {
+        "q_le_p": flags[:N, 0].astype(bool),
+        "p_le_q": flags[:N, 1].astype(bool),
+        "sum_q": sums[0, 0],
+        "sum_p": sums[:N, 1],
+        "fp_q_before_p": fp[:N, 0],
+        "fp_p_before_q": fp[:N, 1],
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj", "bm", "interpret"))
+def compare_matrix(
+    rows: jax.Array,         # [N, m] int32 logical cells
+    cols: jax.Array,         # [M, m] int32 logical cells
+    *,
+    bi: int | None = None,
+    bj: int = 128,
+    bm: int = 512,
+    interpret: bool | None = None,
+):
+    """Tiled all-pairs compare: drop-in for the broadcast reference
+    ``repro.core.clock.comparability_matrix`` without the O(n^2 * m)
+    materialization.
+
+    Returns dict with [N, M] ``a_le_b`` / ``b_le_a`` / ``concurrent``
+    flag matrices, the Eq. 3 ``fp`` of "row before col", and the per-row
+    / per-col sums.  Column sums are precomputed here (an O(M * m) pass)
+    and fed to the kernel — see bloom_matrix.py for why they cannot
+    ADD-accumulate in-kernel.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    if bi is None:
+        # interpret mode amortizes per-grid-step overhead with tall row
+        # tiles; on real TPU the [bi, bj, bm] compare intermediate must
+        # stay well inside VMEM, so keep row tiles short
+        bi = 128 if interpret else 8
+    N, m = rows.shape
+    M, mc = cols.shape
+    assert m == mc, (rows.shape, cols.shape)
+    col_sums = jnp.sum(cols, axis=1).astype(jnp.float32)           # [M]
+    rows_p = pad_to(rows, LANE, axis=1)
+    cols_p = pad_to(cols, LANE, axis=1)
+    mp = rows_p.shape[1]
+    bm_eff = pick_block(mp, bm)
+    # row/col tile sizes: sublane multiples that divide the padded counts
+    rows_p = pad_to(rows_p, 8, axis=0)
+    cols_p = pad_to(cols_p, 8, axis=0)
+    bi_eff = pick_block(rows_p.shape[0], bi, lane=8)
+    bj_eff = pick_block(cols_p.shape[0], bj, lane=8)
+    col_sums_p = pad_to(col_sums[None, :], cols_p.shape[0], axis=1)
+    le, ge, row_sums, fp = bloom_matrix_pallas(
+        rows_p, cols_p, col_sums_p,
+        bi=bi_eff, bj=bj_eff, bm=bm_eff, m_true=m, interpret=interpret,
+    )
+    le = le[:N, :M].astype(bool)
+    ge = ge[:N, :M].astype(bool)
+    return {
+        "a_le_b": le,
+        "b_le_a": ge,
+        "concurrent": jnp.logical_not(jnp.logical_or(le, ge)),
+        "fp": fp[:N, :M],
+        "row_sums": row_sums[:N, 0],
+        "col_sums": col_sums,
     }

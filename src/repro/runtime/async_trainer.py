@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core import clock as bc
 from repro.core.hashing import stable_event_id
+from repro.fleet.registry import ANCESTOR, DESCENDANT, FORKED, SAME, ClockRegistry
 from repro.runtime.clock_runtime import ClockConfig, ClockRuntime, LineageStatus
 
 __all__ = ["AsyncConfig", "PodState", "AsyncCoordinator"]
@@ -74,6 +75,10 @@ class AsyncCoordinator:
         self.params = jax.tree.map(lambda x: x.astype(jnp.float32), params)
         self.momentum = jax.tree.map(jnp.zeros_like, self.params)
         self.clock = ClockRuntime(c_cfg, run_id=run_id)
+        # fleet registry: one slab row per pod clock; all per-round
+        # classification happens in ONE device call against it
+        self.registry = ClockRegistry(
+            capacity=max(16, 4 * a_cfg.n_pods), m=c_cfg.m, k=c_cfg.k)
         self.run_id = run_id
         self.round = 0
         self.log: list = []
@@ -90,6 +95,7 @@ class AsyncCoordinator:
             rt = ClockRuntime(c_cfg, run_id=self.run_id)
             rt.clock = bc.merge(rt.clock, self.clock.clock)
             pods.append(PodState(pod_id=pid, params=dict(self.params), clock=rt))
+        self.registry.admit_many({p.pod_id: p.clock.clock for p in pods})
         return pods
 
     def spawn_pod(self, pod_id: int, c_cfg: ClockConfig) -> PodState:
@@ -99,28 +105,56 @@ class AsyncCoordinator:
         """One outer sync. deltas: {pod_id: delta pytree}.
 
         Returns per-pod decisions {pod_id: (merged, status, fp)}.
+
+        The causal gating is fleet-batched: pod clocks are scattered
+        into the registry (one device call) and classified against the
+        coordinator's clock by the fused one-vs-many kernel (one more) —
+        per-pod work is pure host bookkeeping, so the sync cost no
+        longer scales with pod count times device round-trips.
         """
         decisions = {}
-        # straggler skip by clock-sum gap
-        sums = np.array([float(bc.clock_sum(p.clock.clock)) for p in pods])
+        # retired pods free their slots: elastic churn through arbitrarily
+        # many pod ids must not exhaust the fixed-capacity registry
+        current = {p.pod_id for p in pods}
+        self.registry.evict_many(
+            [pid for pid in self.registry.peer_ids() if pid not in current])
+        known = {p.pod_id: p for p in pods if p.pod_id in self.registry}
+        late = [p for p in pods if p.pod_id not in self.registry]
+        if late:   # pods spawned outside add_pods (elastic joins mid-test)
+            self.registry.admit_many({p.pod_id: p.clock.clock for p in late})
+            known.update({p.pod_id: p for p in late})
+        self.registry.update_many(
+            {pid: p.clock.clock for pid, p in known.items()})
+        view = self.clock.classify_fleet(self.registry)
+
+        # straggler skip by clock-sum gap, over the participating pods
+        slot = {pid: self.registry.slot_of(pid) for pid in known}
+        sums = np.array([float(view.sums[slot[p.pod_id]]) for p in pods])
         skip = self.clock.straggler_mask(sums)
 
         accepted = []
+        accept_mask = np.zeros(self.registry.capacity, bool)
         for i, pod in enumerate(pods):
             if pod.pod_id not in deltas or not pod.alive:
                 decisions[pod.pod_id] = (False, "dead", 0.0)
                 continue
             # fork detection first: a forked pod's delta is never safe, no
             # matter how fresh it looks
-            status, fp = self.clock.lineage(pod.clock.clock)
-            if status == LineageStatus.FORKED:
+            s = slot[pod.pod_id]
+            status_code = int(view.status[s])
+            fp = float(view.fp[s])
+            if status_code == FORKED:
                 decisions[pod.pod_id] = (False, LineageStatus.FORKED, fp)
                 continue
             if skip[i]:
                 decisions[pod.pod_id] = (False, "straggler", 0.0)
                 continue
+            status = {ANCESTOR: LineageStatus.ANCESTOR,
+                      SAME: LineageStatus.SAME,
+                      DESCENDANT: LineageStatus.DESCENDANT}[status_code]
             decisions[pod.pod_id] = (True, status, fp)
             accepted.append(pod.pod_id)
+            accept_mask[s] = True
 
         if accepted:
             avg = jax.tree.map(
@@ -134,19 +168,21 @@ class AsyncCoordinator:
                 self.params, self.momentum, avg)
 
         # commit: the coordinator ABSORBS accepted pods' clocks (paper §3
-        # receive rule — merge by max), ticks the round, and publishes the
-        # union.  Publishing the union is what lets a skipped straggler
-        # catch up: after resync its clock-sum equals the fleet's, so the
-        # gap measures only fresh progress, not permanently-missed ticks.
-        for pod in pods:
-            if decisions[pod.pod_id][0]:
-                self.clock.clock = bc.merge(self.clock.clock, pod.clock.clock)
+        # receive rule — merge by max, batched into ONE slab reduction),
+        # ticks the round, and publishes the union.  Publishing the union
+        # is what lets a skipped straggler catch up: after resync its
+        # clock-sum equals the fleet's, so the gap measures only fresh
+        # progress, not permanently-missed ticks.
+        if accept_mask.any():
+            self.clock.clock = self.registry.union(accept_mask, self.clock.clock)
         self.clock.tick("outer", self.round)
         self.clock.clock = bc.compress(self.clock.clock)
+        # every accepted pod is ≼ the pre-tick union, so merging with the
+        # published clock just yields the published clock: assign it.
+        self.registry.broadcast(accept_mask, self.clock.clock)
         for pod in pods:
             if decisions[pod.pod_id][0]:
-                pod.clock.clock = bc.merge(pod.clock.clock, self.clock.clock)
-                pod.clock.clock = bc.compress(pod.clock.clock)
+                pod.clock.clock = self.clock.clock
                 pod.params = dict(self.params)
         self.round += 1
         self.log.append({p: d for p, d in decisions.items()})

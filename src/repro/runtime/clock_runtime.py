@@ -17,18 +17,25 @@ of fleet size — the paper's point):
   - **straggler detection**: clock sums are monotone progress counters;
     peers lagging more than ``straggler_gap`` ticks are skipped, no
     barrier.
+
+The pairwise receive path (lineage / admit_merge) runs through the fused
+``kernels.ops.merge_compare`` Pallas op: one device call and one host
+transfer per message.  Fleet-facing paths use ``repro.fleet`` (peer
+slab + one-vs-many kernel) via ``classify_fleet``.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import clock as bc
 from repro.core import history as hist
 from repro.core.hashing import stable_event_id
+from repro.kernels import ops
 
 __all__ = ["ClockConfig", "ClockRuntime", "LineageStatus"]
 
@@ -75,16 +82,37 @@ class ClockRuntime:
         self.tick("scale", epoch, n_members)
 
     # ---- comparisons ----
+    def _classify(self, other: bc.BloomClock):
+        """Fused receive-path compare: ONE device call (merged cells,
+        dominance flags, sums, Eq.-3 fp via ``kernels.ops.merge_compare``)
+        and ONE host transfer — no per-predicate ``bool()`` round-trips.
+
+        Returns (status, fp, merged_cells[m] int32 host array).
+        """
+        r = ops.merge_compare(
+            other.logical_cells()[None].astype(jnp.int32),
+            self.clock.logical_cells()[None].astype(jnp.int32))
+        h = jax.device_get(r)
+        a_le_b = bool(h["a_le_b"][0])     # other ≼ mine
+        b_le_a = bool(h["b_le_a"][0])     # mine ≼ other
+        if a_le_b and b_le_a:
+            return LineageStatus.SAME, 0.0, h["merged"][0]
+        if a_le_b:
+            return LineageStatus.ANCESTOR, float(h["fp_a_before_b"][0]), h["merged"][0]
+        if b_le_a:
+            return LineageStatus.DESCENDANT, float(h["fp_b_before_a"][0]), h["merged"][0]
+        # exact — no false negatives (§3)
+        return LineageStatus.FORKED, 0.0, h["merged"][0]
+
     def lineage(self, other: bc.BloomClock) -> tuple[str, float]:
         """Classify another clock against ours + Eq.-3 confidence."""
-        o = bc.compare(other, self.clock)
-        if bool(o.equal):
-            return LineageStatus.SAME, 0.0
-        if bool(o.a_le_b):
-            return LineageStatus.ANCESTOR, float(o.fp_a_before_b)
-        if bool(o.b_le_a):
-            return LineageStatus.DESCENDANT, float(o.fp_b_before_a)
-        return LineageStatus.FORKED, 0.0   # exact — no false negatives (§3)
+        status, fp, _ = self._classify(other)
+        return status, fp
+
+    def classify_fleet(self, registry):
+        """Classify every peer in a ``fleet.ClockRegistry`` against our
+        clock in one device call (see registry.classify_all)."""
+        return registry.classify_all(self.clock)
 
     def refined_fp(self, other: bc.BloomClock) -> float:
         """§3 history refinement: fp against the closest dominating stored
@@ -107,12 +135,16 @@ class ClockRuntime:
 
         Comparable (either direction) with confident fp -> merge + clock max.
         Concurrent -> quarantine (the peer missed a sync barrier).
+        The merged cells come from the SAME fused kernel call as the
+        decision — the accept path costs no extra device work.
         """
-        status, fp = self.lineage(peer_clock)
+        status, fp, merged = self._classify(peer_clock)
         ok = status != LineageStatus.FORKED and fp <= self.cfg.fp_threshold
         if ok:
-            self.clock = bc.merge(self.clock, peer_clock)
-            self.clock = bc.compress(self.clock)
+            self.clock = bc.compress(bc.BloomClock(
+                cells=jnp.asarray(merged, jnp.int32),
+                base=jnp.zeros((), jnp.int32),
+                k=self.clock.k))
         return ok, status, fp
 
     # ---- straggler policy ----

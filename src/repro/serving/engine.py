@@ -10,7 +10,10 @@ engine step decodes one token for every active slot.  Clock integration:
     replaying a session onto a replica that never saw its history is
     exactly the stale-read the paper's comparison detects;
   - fleet-level request ordering across replicas needs no per-replica
-    vector slots (O(m), elastic).
+    vector slots (O(m), elastic);
+  - live session clocks sit in a ``fleet.ClockRegistry`` slab, so bulk
+    migration (``adopt_many``) classifies a whole batch of incoming
+    sessions with ONE fused one-vs-many kernel call.
 """
 from __future__ import annotations
 
@@ -22,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import clock as bc
+from repro.fleet.registry import ClockRegistry
+from repro.kernels import ops
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.runtime.clock_runtime import ClockConfig, ClockRuntime
@@ -50,6 +55,29 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, t: T.prefill(p, cfg, t, buf_len=s_cfg.max_seq))
         self._admitted = 0
+        # fleet registry of live session clocks: migration audits and
+        # fleet dashboards classify all of them in one device call.
+        # Bounded: when full, the oldest tracked session is evicted
+        # (FIFO) so a long-running engine never crashes on admission;
+        # callers can release() finished sessions to free slots early.
+        self.sessions = ClockRegistry(
+            capacity=max(16, 8 * s_cfg.max_batch), m=c_cfg.m, k=c_cfg.k)
+        self._session_order: list = []
+        self._session_seq = 0
+
+    def _register_session(self, sid, clock) -> None:
+        if sid not in self.sessions:
+            while len(self.sessions) >= self.sessions.capacity:
+                self.sessions.evict(self._session_order.pop(0))
+            self._session_order.append(sid)
+        self.sessions.admit(sid, clock)
+
+    def release(self, session: dict) -> None:
+        """Drop a finished session's clock from the registry."""
+        sid = session.get("sid")
+        if sid is not None and sid in self.sessions:
+            self.sessions.evict(sid)
+            self._session_order.remove(sid)
 
     # ---- session admission ----
     def admit(self, prompts: jax.Array) -> dict:
@@ -61,7 +89,11 @@ class ServingEngine:
         self._admitted += B
         sess_clock = ClockRuntime(self.clock.cfg, run_id="serve")
         sess_clock.clock = bc.merge(sess_clock.clock, self.clock.clock)
+        sid = f"{self.replica_id}/s{self._session_seq}"
+        self._session_seq += 1
+        self._register_session(sid, sess_clock.clock)
         return {
+            "sid": sid,
             "caches": caches,
             "last_logits": logits,
             "pos": prompts.shape[1],
@@ -93,6 +125,8 @@ class ServingEngine:
                                               self.clock.clock)
             tok = self._sample(logits, t + 1)
             session["last_logits"] = logits
+        if session.get("sid") in self.sessions:
+            self.sessions.update(session["sid"], session["clock"].clock)
         return jnp.stack(out, axis=1)  # [B, n_tokens]
 
     # ---- migration ----
@@ -106,4 +140,43 @@ class ServingEngine:
         ok, status, fp = self.can_adopt(session)
         if ok:
             self.clock.clock = bc.merge(self.clock.clock, session["clock"].clock)
+            sid = session.get("sid") or f"migrated/s{self._session_seq}"
+            session["sid"] = sid
+            self._session_seq += 1
+            self._register_session(sid, session["clock"].clock)
+        return ok
+
+    def adopt_many(self, sessions: list) -> np.ndarray:
+        """Clock-gated BULK migration: classify every incoming session
+        against the replica clock with ONE fused one-vs-many kernel
+        call, adopt the safe ones, merge their clocks in one reduction.
+
+        Returns the bool accept mask (aligned with ``sessions``).
+        """
+        if not sessions:
+            return np.zeros(0, bool)
+        cells = jnp.stack([
+            s["clock"].clock.logical_cells().astype(jnp.int32)
+            for s in sessions])
+        out = ops.classify_vs_many(
+            self.clock.clock.logical_cells().astype(jnp.int32), cells)
+        h = jax.device_get(out)
+        equal = h["p_le_q"] & h["q_le_p"]
+        fp = np.where(equal, 0.0, h["fp_p_before_q"])
+        # session ≼ replica (its KV snapshot is from our causal past)
+        # with Eq.-3 confidence — same rule as can_adopt, batched
+        ok = h["p_le_q"] & (fp <= self.clock.cfg.fp_threshold)
+        if ok.any():
+            merged = jnp.maximum(
+                self.clock.clock.logical_cells(),
+                jnp.max(jnp.where(jnp.asarray(ok)[:, None], cells, 0), axis=0))
+            self.clock.clock = bc.compress(bc.BloomClock(
+                cells=merged, base=jnp.zeros((), jnp.int32),
+                k=self.clock.clock.k))
+            for i, s in enumerate(sessions):
+                if ok[i]:
+                    sid = s.get("sid") or f"migrated/s{self._session_seq}"
+                    s["sid"] = sid
+                    self._session_seq += 1
+                    self._register_session(sid, s["clock"].clock)
         return ok

@@ -1,0 +1,256 @@
+"""Fleet subsystem validation: matrix kernels vs the broadcast reference,
+registry/gossip/monitor behavior, and sim-driven gossip scoring.
+
+Kernels run with interpret=True on CPU (dispatched automatically by
+``kernels.ops``); flag matrices must be bit-exact against
+``comparability_matrix``, fp rates within 1e-6.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clock as bc
+from repro.core.sim import SimConfig, run_gossip_sim
+from repro.fleet import (
+    ANCESTOR,
+    DEAD,
+    DESCENDANT,
+    FORKED,
+    SAME,
+    ClockRegistry,
+    GossipConfig,
+    fleet_health,
+    gossip_round,
+)
+from repro.kernels import ops
+
+RNG = np.random.default_rng(7)
+
+
+def _cells(n, m, hi=20):
+    return jnp.asarray(RNG.integers(0, hi, (n, m)), jnp.int32)
+
+
+def _clock_from(row) -> bc.BloomClock:
+    return bc.BloomClock(jnp.asarray(row, jnp.int32), jnp.zeros((), jnp.int32), 3)
+
+
+def _ticked(c, events):
+    for e in events:
+        c = bc.tick(c, jnp.uint32(e >> 32), jnp.uint32(e & 0xFFFFFFFF))
+    return c
+
+
+# ---------------------------------------------------------------------------
+# matrix kernel vs broadcast reference (ragged shapes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m", [
+    (5, 300),      # N not a tile multiple, m needs lane padding
+    (16, 64),      # m below one lane
+    (33, 129),     # both ragged
+    (8, 512),      # aligned
+    (130, 1000),   # N above one col tile, m needs padding
+])
+def test_compare_matrix_matches_broadcast_reference(n, m):
+    cells = _cells(n, m)
+    # inject ordered/equal structure so every flag kind is exercised
+    cells = cells.at[1].set(cells[0])
+    if n > 2:
+        cells = cells.at[2].set(cells[0] + 1)
+    clocks = bc.BloomClock(cells, jnp.zeros((n,), jnp.int32), 3)
+    ref = bc.comparability_matrix(clocks)
+    got = ops.compare_matrix(cells, cells)
+    np.testing.assert_array_equal(np.asarray(got["a_le_b"]),
+                                  np.asarray(ref["a_le_b"]))
+    np.testing.assert_array_equal(np.asarray(got["concurrent"]),
+                                  np.asarray(ref["concurrent"]))
+    np.testing.assert_allclose(np.asarray(got["fp"]), np.asarray(ref["fp"]),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got["row_sums"]),
+                               np.asarray(jnp.sum(cells, axis=1)))
+
+
+@pytest.mark.parametrize("n,m", [(5, 300), (33, 129), (17, 512)])
+def test_classify_vs_many_matches_pairwise(n, m):
+    cells = _cells(n, m)
+    cells = cells.at[1].set(cells[0])
+    q = cells[0]
+    got = ops.classify_vs_many(q, cells)
+    clocks = bc.BloomClock(cells, jnp.zeros((n,), jnp.int32), 3)
+    qc = bc.BloomClock(q, jnp.zeros((), jnp.int32), 3)
+    o = bc.compare(qc, clocks)     # broadcast pairwise reference
+    np.testing.assert_array_equal(np.asarray(got["q_le_p"]), np.asarray(o.a_le_b))
+    np.testing.assert_array_equal(np.asarray(got["p_le_q"]), np.asarray(o.b_le_a))
+    np.testing.assert_allclose(np.asarray(got["fp_q_before_p"]),
+                               np.asarray(o.fp_a_before_b), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got["fp_p_before_q"]),
+                               np.asarray(o.fp_b_before_a), atol=1e-6)
+
+
+def test_matrix_kernel_multi_tile_accumulation():
+    """Dominance violated ONLY in the last m-tile / last rows: catches
+    bad cross-tile accumulation and bad ragged-row handling."""
+    n, m = 9, 1000     # pads to 1024 cells, 16 rows
+    a = jnp.zeros((n, m), jnp.int32)
+    a = a.at[0, m - 1].set(5)              # row 0 beats everyone, last tile
+    got = ops.compare_matrix(a, a)
+    le = np.asarray(got["a_le_b"])
+    assert not le[0, 1] and le[1, 0]       # 0 !<= 1 but 1 <= 0
+    assert float(np.asarray(got["row_sums"])[0]) == 5.0
+
+
+# ---------------------------------------------------------------------------
+# registry invariants
+# ---------------------------------------------------------------------------
+
+def _seeded_registry(m=128, k=3):
+    local = _ticked(bc.zeros(m, k), range(20))
+    reg = ClockRegistry(capacity=8, m=m, k=k)
+    reg.admit_many({
+        "anc": _ticked(bc.zeros(m, k), range(10)),      # prefix of local
+        "same": local,
+        "desc": _ticked(local, range(100, 105)),
+        "fork": _ticked(bc.zeros(m, k), range(500, 515)),
+    })
+    return reg, local
+
+
+def test_registry_classify_all_statuses():
+    reg, local = _seeded_registry()
+    view = reg.classify_all(local)
+    assert view.status[reg.slot_of("anc")] == ANCESTOR
+    assert view.status[reg.slot_of("same")] == SAME
+    assert view.status[reg.slot_of("desc")] == DESCENDANT
+    assert view.status[reg.slot_of("fork")] == FORKED
+    assert (view.status[~view.alive] == DEAD).all()
+    # exact verdicts carry fp 0; probabilistic ones are in (0, 1]
+    assert view.fp[reg.slot_of("same")] == 0.0
+    assert view.fp[reg.slot_of("fork")] == 0.0
+    assert 0.0 <= view.fp[reg.slot_of("anc")] <= 1.0
+
+
+def test_registry_admit_update_evict():
+    reg, local = _seeded_registry()
+    assert len(reg) == 4 and "anc" in reg
+    # cached sums must track cell contents through updates
+    np.testing.assert_allclose(
+        np.asarray(reg.sums), np.asarray(jnp.sum(reg.cells, axis=1)))
+    reg.update("anc", local)
+    assert reg.classify_all(local).status[reg.slot_of("anc")] == SAME
+    slot = reg.slot_of("fork")
+    reg.evict("fork")
+    assert "fork" not in reg and len(reg) == 3
+    assert reg.classify_all(local).status[slot] == DEAD
+    # slot is reusable and re-admits land batched
+    reg.admit_many({"new1": local, "new2": local})
+    assert len(reg) == 5
+    # re-admitting a known id keeps its slot
+    s0 = reg.slot_of("new1")
+    reg.admit("new1", _ticked(local, [1234]))
+    assert reg.slot_of("new1") == s0
+
+
+def test_registry_capacity_enforced():
+    reg = ClockRegistry(capacity=2, m=64, k=3)
+    c = bc.zeros(64, 3)
+    reg.admit_many({"a": c, "b": c})
+    with pytest.raises(RuntimeError):
+        reg.admit("c", c)
+
+
+def test_registry_union_dominates_members():
+    reg, local = _seeded_registry()
+    mask = np.asarray(reg.alive).copy()
+    merged = reg.union(mask, local)
+    assert bool(bc.compare(local, merged).a_le_b)
+    for pid in reg.peer_ids():
+        assert bool(bc.compare(reg.get(pid), merged).a_le_b)
+
+
+# ---------------------------------------------------------------------------
+# gossip rounds
+# ---------------------------------------------------------------------------
+
+def test_gossip_round_policy():
+    reg, local = _seeded_registry()
+    merged, report = gossip_round(reg, local, GossipConfig(fp_threshold=1.0))
+    assert report.quarantined[reg.slot_of("fork")]
+    assert report.n_accepted == 3
+    # merged absorbed the descendant's extra events
+    assert bool(bc.compare(reg.get("desc"), merged).a_le_b)
+    assert bool(bc.compare(local, merged).a_le_b)
+    # push-back: accepted rows now equal the union
+    view = reg.classify_all(merged)
+    for pid in ("anc", "same", "desc"):
+        assert view.status[reg.slot_of(pid)] == SAME
+
+
+def test_gossip_straggler_skipped_not_quarantined():
+    m, k = 128, 3
+    reg = ClockRegistry(capacity=8, m=m, k=k)
+    local = _ticked(bc.zeros(m, k), range(200))
+    reg.admit_many({
+        "fresh1": local, "fresh2": local, "fresh3": local,
+        "lagging": _ticked(bc.zeros(m, k), range(2)),   # ancestor, far behind
+    })
+    merged, report = gossip_round(
+        reg, local, GossipConfig(fp_threshold=1.0, straggler_gap=10.0))
+    s = reg.slot_of("lagging")
+    assert report.stragglers[s] and not report.accepted[s]
+    assert not report.quarantined[s]
+    assert report.n_accepted == 3
+
+
+def test_gossip_empty_registry_is_identity():
+    m, k = 64, 3
+    reg = ClockRegistry(capacity=4, m=m, k=k)
+    local = _ticked(bc.zeros(m, k), range(5))
+    merged, report = gossip_round(reg, local)
+    assert report.n_accepted == 0
+    assert bool(jnp.all(merged.logical_cells() == local.logical_cells()))
+
+
+# ---------------------------------------------------------------------------
+# monitor
+# ---------------------------------------------------------------------------
+
+def test_fleet_health_fork_components():
+    m, k = 128, 3
+    reg = ClockRegistry(capacity=8, m=m, k=k)
+    a = _ticked(bc.zeros(m, k), range(10))
+    b = _ticked(bc.zeros(m, k), range(1000, 1010))    # independent history
+    reg.admit_many({
+        "a1": a, "a2": _ticked(a, [77]),              # component 1
+        "b1": b, "b2": _ticked(b, [88]),              # component 2
+    })
+    health = fleet_health(reg)
+    assert health.n_alive == 4
+    assert health.n_components == 2
+    lab = health.component
+    assert lab[reg.slot_of("a1")] == lab[reg.slot_of("a2")]
+    assert lab[reg.slot_of("b1")] == lab[reg.slot_of("b2")]
+    assert lab[reg.slot_of("a1")] != lab[reg.slot_of("b1")]
+    assert health.fp_hist.sum() >= 2                  # ordered pairs recorded
+
+
+# ---------------------------------------------------------------------------
+# sim-driven gossip validation (vector-clock ground truth)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_gossip_sim_no_false_negatives(seed):
+    r = run_gossip_sim(
+        SimConfig(n_nodes=6, n_events=200, m=64, k=3, seed=seed))
+    assert r.false_negatives == 0
+    assert r.rounds == 6
+    assert r.within_eq3_band
+
+
+def test_gossip_sim_small_m_stays_in_band():
+    """With m tiny relative to event count, fp claims DO happen; the
+    measured rate must stay within the Eq. 3 band."""
+    r = run_gossip_sim(
+        SimConfig(n_nodes=8, n_events=400, m=16, k=2, seed=5), n_rounds=8)
+    assert r.false_negatives == 0
+    assert r.within_eq3_band

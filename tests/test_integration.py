@@ -162,6 +162,26 @@ class TestAsyncClockGuard:
         decisions = coord.outer_step(pods, deltas)
         assert all(ok for ok, _, _ in decisions.values())
 
+    def test_elastic_pod_churn_never_exhausts_registry(self):
+        """Retired pod ids free their registry slots: churning through
+        many more distinct pods than the slab holds must keep working."""
+        coord, pods, a_cfg, sgd_step, data_fn = self._setup()
+        cap = coord.registry.capacity
+        c_cfg = coord.clock.cfg
+        next_id = len(pods)
+        for rnd in range(3):
+            deltas = {}
+            for pod in pods:
+                d, _ = run_pod_round(pod, sgd_step, data_fn, a_cfg, rnd)
+                deltas[pod.pod_id] = d
+            decisions = coord.outer_step(pods, deltas)
+            assert all(ok for ok, _, _ in decisions.values()), decisions
+            # full fleet replacement each round: cap+ distinct ids total
+            pods = coord.add_pods(
+                list(range(next_id, next_id + cap // 2)), c_cfg)
+            next_id += cap // 2
+        assert len(coord.registry) <= cap
+
     def test_forked_pod_quarantined(self):
         """A pod restored from a pre-commit snapshot that then does local
         work is CONCURRENT with the advanced coordinator -> quarantined.
@@ -236,6 +256,33 @@ class TestServing:
         eng_c.clock.tick("own-history")
         ok2, status2, _ = eng_c.can_adopt(sess)
         assert not ok2 and status2 == LineageStatus.FORKED
+        # bulk migration agrees with the scalar guard in one kernel call
+        mask = eng_b.adopt_many([sess])
+        assert list(mask) == [True]
+        assert sess["sid"] in eng_b.sessions
+
+    def test_session_registry_bounded_and_releasable(self):
+        """The session-clock registry must never crash a long-running
+        engine: oldest sessions evict FIFO at capacity, release() frees
+        slots, adopt() writes the minted sid back."""
+        cfg32 = dataclasses.replace(CFG, dtype="float32")
+        params = init_params(KEY, cfg32)
+        c_cfg = ClockConfig(m=128, fp_threshold=1.0 - 1e-6)
+        eng = ServingEngine(params, cfg32, ServeConfig(max_seq=64), c_cfg,
+                            replica_id="A")
+        cap = eng.sessions.capacity
+        prompts = jax.random.randint(KEY, (2, 8), 0, cfg32.vocab)
+        last = None
+        for _ in range(cap + 3):
+            last = eng.admit(prompts)
+        assert len(eng.sessions) == cap          # FIFO-bounded, no raise
+        assert last["sid"] in eng.sessions       # newest survives
+        eng.release(last)
+        assert last["sid"] not in eng.sessions
+        assert len(eng.sessions) == cap - 1
+        migrated = {"clock": last["clock"]}
+        assert eng.adopt(migrated)
+        assert migrated["sid"] in eng.sessions   # sid written back
 
 
 class TestSimulatorVsPaper:

@@ -7,6 +7,11 @@ bloom clock can over-claim order but never miss it.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# optional dev dependency (pip install -e ".[dev]"): skip cleanly instead of
+# aborting the whole collection when it isn't in the environment
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import clock as bc
@@ -109,6 +114,65 @@ def test_simulator_no_false_negatives(seed):
     r = run_sim(SimConfig(n_nodes=6, n_events=150, m=32, k=3, seed=seed,
                           sample_pairs=1500))
     assert r.false_negatives == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    peer_events=st.lists(
+        st.lists(st.integers(0, 2**40), min_size=0, max_size=12),
+        min_size=1, max_size=6),
+    local_events=st.lists(st.integers(0, 2**40), min_size=0, max_size=12),
+)
+def test_registry_classify_matches_pairwise_compare(peer_events, local_events):
+    """Fleet invariant: one batched classify_all agrees with per-peer
+    compare() for every peer, and the cached sums track the cells."""
+    from repro.fleet import ANCESTOR, DESCENDANT, FORKED, SAME, ClockRegistry
+
+    m, k = 64, 3
+    local = _tick_seq(bc.zeros(m, k), local_events)
+    reg = ClockRegistry(capacity=8, m=m, k=k)
+    reg.admit_many({i: _tick_seq(bc.zeros(m, k), evs)
+                    for i, evs in enumerate(peer_events)})
+    np.testing.assert_allclose(
+        np.asarray(reg.sums), np.asarray(jnp.sum(reg.cells, axis=1)))
+    view = reg.classify_all(local)
+    for i in range(len(peer_events)):
+        o = bc.compare(reg.get(i), local)
+        want = (SAME if bool(o.equal) else
+                ANCESTOR if bool(o.a_le_b) else
+                DESCENDANT if bool(o.b_le_a) else FORKED)
+        assert int(view.status[reg.slot_of(i)]) == want
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    peer_events=st.lists(
+        st.lists(st.integers(0, 2**40), min_size=0, max_size=10),
+        min_size=1, max_size=5),
+    local_events=st.lists(st.integers(0, 2**40), min_size=0, max_size=10),
+)
+def test_gossip_merge_is_fleet_lub(peer_events, local_events):
+    """Gossip invariant: the merged clock dominates the local clock and
+    every accepted peer, and never absorbs a quarantined (forked) peer's
+    unilateral events beyond what accepted peers supplied."""
+    from repro.fleet import ClockRegistry, GossipConfig, gossip_round
+
+    m, k = 64, 3
+    local = _tick_seq(bc.zeros(m, k), local_events)
+    reg = ClockRegistry(capacity=8, m=m, k=k)
+    peers = {i: _tick_seq(bc.zeros(m, k), evs)
+             for i, evs in enumerate(peer_events)}
+    reg.admit_many(peers)
+    merged, report = gossip_round(
+        reg, local, GossipConfig(fp_threshold=1.0, push_back=False))
+    assert bool(bc.compare(local, merged).a_le_b)
+    lub = local.logical_cells()
+    for i, p in peers.items():
+        if report.accepted[reg.slot_of(i)]:
+            assert bool(bc.compare(p, merged).a_le_b)
+            lub = jnp.maximum(lub, p.logical_cells())
+    # merged == lub(local, accepted): nothing extra leaked in
+    assert bool(jnp.all(merged.logical_cells() == lub))
 
 
 @settings(max_examples=8, deadline=None)
