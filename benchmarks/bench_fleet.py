@@ -1,23 +1,30 @@
-"""Fleet-subsystem benchmarks: bulk classification vs the broadcast path.
+"""Fleet-subsystem benchmarks: packed-slab engines vs references.
 
-Three claims, each (name, us_per_call, derived) CSV rows like bench_clock:
+Every claim is recorded twice: as a (name, us_per_call, derived) CSV row
+on stdout (like bench_clock) and as a machine-readable record in
+``BENCH_fleet.json`` — ``{op, shape, ms, speedup_vs_reference,
+reference}`` — so the perf trajectory is tracked across PRs and CI can
+smoke-run the whole file in interpret mode.
 
-- **all-pairs**: the tiled Pallas matrix kernel (interpret mode on CPU,
-  compiled on TPU) vs ``repro.core.clock.comparability_matrix``, the
-  eager O(n^2 * m) broadcast reference.  Checked bit-exact on flags and
-  to 1e-6 on Eq. 3 fp before timing; the acceptance config is n = m =
-  1024 (three ~4 GB broadcast intermediates for the reference vs a
-  streamed tile sweep for the kernel).
-- **classify-all**: one registry ``classify_all`` device call vs the
-  per-peer ``lineage`` loop the runtime used to run (one fused compare +
-  host sync per peer).
-- **gossip round**: full anti-entropy rounds/second over the registry.
+- **all-pairs**: the packed u8 triangle kernel (the registry's engine)
+  vs (a) the int32 Pallas kernel it replaced and (b)
+  ``repro.core.clock.comparability_matrix``, the eager O(n^2 * m)
+  broadcast reference.  Flags are checked bit-exact and fp to 1e-6
+  before timing.  The acceptance config is n = m = 1024, where the
+  packed kernel must be >= 2x the int32 kernel.
+- **classify-all**: one registry ``classify_all`` device call (packed
+  one-vs-many kernel) vs the per-peer ``lineage`` loop.
+- **gossip round**: full anti-entropy rounds/second over the registry,
+  including the u8 push-back wire model.
 
 ``python -m benchmarks.bench_fleet`` runs the full acceptance config;
-``all_benches()`` (used by benchmarks/run.py) runs a smaller sweep.
+``--quick`` (CI smoke) and ``all_benches()`` (benchmarks/run.py) run a
+smaller sweep.  ``--json PATH`` overrides the output path.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -26,7 +33,7 @@ import numpy as np
 
 from repro.core import clock as bc
 from repro.fleet import ClockRegistry, GossipConfig, fleet_health, gossip_round
-from repro.kernels import ops
+from repro.kernels import ops, pack
 
 
 def _rand_cells(n: int, m: int, seed: int = 0) -> jnp.ndarray:
@@ -42,31 +49,64 @@ def _time(fn, n: int = 3) -> float:
     return (time.perf_counter() - t0) / n
 
 
-def bench_all_pairs(n: int = 1024, m: int = 1024, verify: bool = True) -> list:
-    """Tiled matrix kernel vs broadcast reference: correctness + speedup."""
+def _rec(records: list, op: str, shape: str, seconds: float,
+         reference: str | None = None, speedup: float | None = None) -> None:
+    records.append({
+        "op": op,
+        "shape": shape,
+        "ms": round(seconds * 1e3, 4),
+        "speedup_vs_reference": round(speedup, 3) if speedup else None,
+        "reference": reference,
+    })
+
+
+def bench_all_pairs(n: int = 1024, m: int = 1024, verify: bool = True,
+                    records: list | None = None) -> list:
+    """Packed triangle kernel vs int32 kernel vs broadcast reference."""
+    records = records if records is not None else []
     rows = []
+    shape = f"n{n}_m{m}"
     cells = _rand_cells(n, m)
+    cells_u8, base, ok = pack.pack_rows(cells)
+    assert bool(ok.all())
     clocks = bc.BloomClock(cells, jnp.zeros((n,), jnp.int32), 4)
 
+    # time the kernels BEFORE touching the broadcast reference: its
+    # O(n^2 * m) intermediates (~4 GB at the acceptance config) degrade
+    # allocator/cache behavior for everything measured after them
+    t_packed = _time(lambda: ops.compare_matrix_packed(cells_u8, base))
+    t_i32 = _time(lambda: ops.compare_matrix(cells, cells, engine="i32"))
+
     if verify:
-        got = jax.device_get(ops.compare_matrix(cells, cells))
+        got = jax.device_get(ops.compare_matrix_packed(cells_u8, base))
+        i32 = jax.device_get(ops.compare_matrix(cells, cells, engine="i32"))
         ref = jax.device_get(bc.comparability_matrix(clocks))
         flags_exact = bool(
             np.array_equal(got["a_le_b"], ref["a_le_b"])
-            and np.array_equal(got["concurrent"], ref["concurrent"]))
+            and np.array_equal(got["concurrent"], ref["concurrent"])
+            and np.array_equal(got["a_le_b"], i32["a_le_b"])
+            and np.array_equal(got["b_le_a"], i32["b_le_a"]))
         fp_err = float(np.max(np.abs(got["fp"] - ref["fp"])))
-        rows.append((f"matrix_kernel_verify_n{n}_m{m}", 0.0,
+        rows.append((f"matrix_kernel_verify_{shape}", 0.0,
                      f"flags_exact={flags_exact} max_fp_err={fp_err:.2e}"))
         assert flags_exact and fp_err <= 1e-6, (flags_exact, fp_err)
 
-    t_kernel = _time(lambda: ops.compare_matrix(cells, cells))
     t_ref = _time(lambda: bc.comparability_matrix(clocks), n=1)
-    rows.append((f"matrix_kernel_n{n}_m{m}", t_kernel * 1e6,
-                 f"{n * n / t_kernel / 1e6:.1f} Mpairs/s"))
-    rows.append((f"broadcast_reference_n{n}_m{m}", t_ref * 1e6,
+    rows.append((f"matrix_packed_u8_{shape}", t_packed * 1e6,
+                 f"{n * n / t_packed / 1e6:.1f} Mpairs/s"))
+    rows.append((f"matrix_kernel_i32_{shape}", t_i32 * 1e6,
+                 f"{n * n / t_i32 / 1e6:.1f} Mpairs/s"))
+    rows.append((f"broadcast_reference_{shape}", t_ref * 1e6,
                  f"{n * n / t_ref / 1e6:.1f} Mpairs/s"))
-    rows.append((f"matrix_speedup_n{n}_m{m}", 0.0,
-                 f"kernel_over_broadcast={t_ref / t_kernel:.1f}x (need >=5x)"))
+    bar = " (need >=2x)" if (n, m) == (1024, 1024) else ""
+    rows.append((f"matrix_packed_speedup_{shape}", 0.0,
+                 f"packed_over_i32={t_i32 / t_packed:.2f}x{bar} "
+                 f"packed_over_broadcast={t_ref / t_packed:.1f}x"))
+    _rec(records, "bloom_matrix_pallas_packed_u8", shape, t_packed,
+         reference="bloom_matrix_pallas_int32", speedup=t_i32 / t_packed)
+    _rec(records, "bloom_matrix_pallas_int32", shape, t_i32,
+         reference="comparability_matrix", speedup=t_ref / t_i32)
+    _rec(records, "comparability_matrix", shape, t_ref)
     return rows
 
 
@@ -80,39 +120,49 @@ def _filled_registry(n: int, m: int, seed: int = 0) -> ClockRegistry:
     return registry
 
 
-def bench_classify_all(n: int = 1024, m: int = 1024) -> list:
+def bench_classify_all(n: int = 1024, m: int = 1024,
+                       records: list | None = None) -> list:
     """One fused classify_all call vs the per-peer lineage loop."""
     from repro.runtime.clock_runtime import ClockConfig, ClockRuntime
 
+    records = records if records is not None else []
     rows = []
+    shape = f"n{n}_m{m}"
     registry = _filled_registry(n, m)
     rt = ClockRuntime(ClockConfig(m=m, k=4))
     rt.clock = registry.get("peer0")
 
     t_fleet = _time(lambda: registry.classify_all(rt.clock))
-    rows.append((f"classify_all_n{n}_m{m}", t_fleet * 1e6,
-                 f"{n / t_fleet / 1e3:.1f} Kpeers/s one device call"))
+    rows.append((f"classify_all_{shape}", t_fleet * 1e6,
+                 f"{n / t_fleet / 1e3:.1f} Kpeers/s one device call (packed)"))
 
     def loop(k_peers: int = 64):
         return [rt.lineage(registry.get(f"peer{i}")) for i in range(k_peers)]
 
     t_loop = _time(loop, n=1) / 64 * n     # extrapolated to n peers
-    rows.append((f"lineage_loop_n{n}_m{m}", t_loop * 1e6,
+    rows.append((f"lineage_loop_{shape}", t_loop * 1e6,
                  f"extrapolated from 64 peers; {t_loop / t_fleet:.1f}x slower"))
+    _rec(records, "classify_all_packed", shape, t_fleet,
+         reference="per_peer_lineage_loop", speedup=t_loop / t_fleet)
     return rows
 
 
-def bench_gossip(n: int = 1024, m: int = 1024) -> list:
+def bench_gossip(n: int = 1024, m: int = 1024,
+                 records: list | None = None) -> list:
+    records = records if records is not None else []
     rows = []
+    shape = f"n{n}_m{m}"
     registry = _filled_registry(n, m)
     local = registry.get("peer0")
     cfg = GossipConfig(fp_threshold=1.0, push_back=False)
     t = _time(lambda: gossip_round(registry, local, cfg)[0].cells)
-    rows.append((f"gossip_round_n{n}_m{m}", t * 1e6,
+    rows.append((f"gossip_round_{shape}", t * 1e6,
                  f"{1.0 / t:.2f} rounds/s full classify+merge"))
+    _rec(records, "gossip_round", shape, t)
     t_h = _time(lambda: fleet_health(registry).n_components, n=1)
-    rows.append((f"fleet_health_n{n}_m{m}", t_h * 1e6,
+    rows.append((f"fleet_health_{shape}", t_h * 1e6,
                  "all-pairs + fork components + fp histogram"))
+    _rec(records, "fleet_health", shape, t_h)
     return rows
 
 
@@ -126,13 +176,27 @@ def all_benches() -> list:
     return rows
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="small shapes (CI smoke, interpret mode on CPU)")
+    p.add_argument("--json", default="BENCH_fleet.json",
+                   help="machine-readable output path")
+    args = p.parse_args(argv)
+    n, m = (256, 512) if args.quick else (1024, 1024)
+    records: list = []
+    rows = (bench_all_pairs(n=n, m=m, records=records)
+            + bench_classify_all(n=n, m=m, records=records)
+            + bench_gossip(n=n, m=m, records=records))
     print("name,us_per_call,derived")
-    for name, us, derived in (
-            bench_all_pairs(n=1024, m=1024)
-            + bench_classify_all(n=1024, m=1024)
-            + bench_gossip(n=1024, m=1024)):
+    for name, us, derived in rows:
         print(f'{name},{us:.2f},"{derived}"')
+    with open(args.json, "w") as f:
+        json.dump({"backend": jax.default_backend(),
+                   "interpret": jax.default_backend() != "tpu",
+                   "records": records}, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {len(records)} records -> {args.json}")
 
 
 if __name__ == "__main__":

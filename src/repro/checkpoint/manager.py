@@ -110,6 +110,22 @@ class CheckpointManager:
         steps = self.list_steps()
         return steps[-1] if steps else None
 
+    def clock_manifests(self) -> list:
+        """[(step, manifest)] for every checkpoint, sorted by step.
+
+        Reads only the manifest.json files (clock snapshots are a few KB
+        in §4 wire form) — this is what ``ClockRuntime.
+        classify_checkpoints`` feeds to one ``classify_vs_many`` call to
+        lineage-check a whole directory without touching state tensors.
+        """
+        self.wait()
+        out = []
+        for step in self.list_steps():
+            path = os.path.join(self.dir, f"step_{step}", "manifest.json")
+            with open(path) as f:
+                out.append((step, json.load(f)))
+        return out
+
     def restore(self, step: Optional[int] = None,
                 target_structure=None, shardings=None):
         """Returns (state, manifest). With ``shardings`` (a pytree matching

@@ -25,6 +25,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.hashing import bloom_indices
 
@@ -39,6 +40,9 @@ __all__ = [
     "compress",
     "decompress",
     "clock_sum",
+    "residual_span",
+    "to_wire",
+    "from_wire",
 ]
 
 
@@ -201,6 +205,39 @@ def compress(c: BloomClock) -> BloomClock:
 def decompress(c: BloomClock) -> BloomClock:
     """Inverse of compress (materialize logical cells, zero base)."""
     return BloomClock(cells=c.logical_cells(), base=jnp.zeros_like(c.base), k=c.k)
+
+
+def residual_span(c: BloomClock) -> jax.Array:
+    """max - min of the residual cells: the §4 moving-window width.
+
+    A clock whose span fits a byte ships / stores as u8 residuals plus
+    one int32 base (see ``to_wire`` and ``repro.kernels.pack``).
+    """
+    return jnp.max(c.cells, axis=-1) - jnp.min(c.cells, axis=-1)
+
+
+def to_wire(c: BloomClock) -> dict:
+    """Wire snapshot of one clock: §4 compression + u8 quantization.
+
+    Applies ``compress`` then emits the residuals as uint8 whenever the
+    window span fits a byte (the common case the paper argues for —
+    ~4x smaller messages), falling back to int32 otherwise.  The dict is
+    what gossip transports and checkpoint manifests persist.
+    """
+    cc = compress(c)
+    cells = np.asarray(cc.cells)
+    if cells.max(initial=0) <= 255:
+        cells = cells.astype(np.uint8)
+    return {"cells": cells, "base": int(cc.base), "k": cc.k}
+
+
+def from_wire(snap: dict) -> BloomClock:
+    """Rebuild a clock from a ``to_wire`` dict (either cell dtype)."""
+    return BloomClock(
+        cells=jnp.asarray(snap["cells"], jnp.int32),
+        base=jnp.asarray(int(snap["base"]), jnp.int32),
+        k=int(snap["k"]),
+    )
 
 
 # ---------------------------------------------------------------------------

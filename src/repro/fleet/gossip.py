@@ -16,11 +16,16 @@ Python on the hot path):
 4. optional push-back: the merged union is broadcast into the accepted
    rows, modelling the outbound half of anti-entropy — after a round the
    accepted peers' registry rows equal the union, so a skipped straggler
-   that later syncs catches up instead of lagging forever.
+   that later syncs catches up instead of lagging forever.  The row
+   ships in §4 wire form — u8 residuals plus one base scalar (the
+   registry slab itself is packed, see ``kernels.pack``) — so the
+   outbound half costs ~4x less than an int32 row per peer;
+   ``GossipReport.pushback_bytes`` records the modelled wire cost.
 
-The whole round costs O(N * m / lanes) device work and exactly two
-host<->device transfers (the view fetch and the merged clock),
-independent of how many peers are accepted.
+The whole round costs O(N * m / lanes) device work and a handful of
+host<->device transfers independent of how many peers are accepted:
+the view fetch, the merged clock, and (with push-back) the packed row's
+scalar base + fits-u8 flag.
 """
 from __future__ import annotations
 
@@ -50,6 +55,7 @@ class GossipReport:
     stragglers: np.ndarray        # skipped this round (not quarantined)
     unconfident: np.ndarray       # comparable but fp above threshold
     view: reg.FleetView           # the classification the round acted on
+    pushback_bytes: int = 0       # wire cost of the outbound half (§4 form)
 
     @property
     def n_accepted(self) -> int:
@@ -87,11 +93,16 @@ def gossip_round(
     accepted = comparable & ~unconfident
 
     merged = local
+    pushback_bytes = 0
     if accepted.any():
         merged = registry.union(accepted, local)
         merged = bc.compress(merged)
         if cfg.push_back:
-            registry.broadcast(accepted, merged)
+            shipped_packed = registry.broadcast(accepted, merged)
+            # u8 residuals + int32 base per accepted peer when the row
+            # packs; int32 cells otherwise (promoted-row fallback)
+            cell_bytes = registry.m * (1 if shipped_packed else 4)
+            pushback_bytes = int(accepted.sum()) * (cell_bytes + 4)
 
     return merged, GossipReport(
         accepted=accepted,
@@ -99,4 +110,5 @@ def gossip_round(
         stragglers=stragglers,
         unconfident=unconfident,
         view=view,
+        pushback_bytes=pushback_bytes,
     )

@@ -1,7 +1,9 @@
 """Fleet health views built on the tiled all-pairs Pallas kernel.
 
-``fleet_health`` runs ONE ``compare_matrix`` call over the registry slab
-and derives, on host numpy:
+``fleet_health`` runs ONE ``registry.all_pairs`` call — the symmetric
+packed-triangle kernel over the gathered ALIVE rows only (dead slots
+cost no compute and report all-False flags) — and derives, on host
+numpy:
 
 - **fork components**: connected components of the comparability graph
   (peers i, j connected iff their clocks are ordered either way).  A

@@ -1,18 +1,29 @@
-"""ClockRegistry: a fixed-capacity slab of peer bloom clocks.
+"""ClockRegistry: a fixed-capacity quantized slab of peer bloom clocks.
 
 The registry is the fleet-scale replacement for holding one
 ``BloomClock`` object per peer and comparing them one ``bool()`` at a
-time.  All peer state lives in three device arrays:
+time.  Peer state lives in four device arrays — the §4 packed layout
+(see ``repro.kernels.pack``):
 
-    cells [N, m] int32   logical cells per slot (decompressed)
-    sums  [N]    float32 cached total increments (Eq. 3 inputs)
-    alive [N]    bool    liveness mask (evicted slots stay allocated)
+    cells_u8 [N, m] uint8  window-relative residuals per slot
+    base     [N]    int32  per-slot window offset (logical = base + u8)
+    sums     [N]    f32    cached total increments (Eq. 3 inputs)
+    alive    [N]    bool   liveness mask (evicted slots stay allocated)
+
+u8 residuals cut slab memory and every kernel's HBM traffic 4x versus
+the old int32 slab.  A row whose residual span cannot fit a byte is
+**automatically promoted**: its int32 logical cells go to a small host
+side-store and all bulk operations transparently fall back to a
+materialized int32 slab until the row is overwritten with packable data
+(or evicted).  Scatter, union and broadcast operate directly on
+(u8, base) — no int32 round-trip on the packed path.
 
 Slot assignment is host-side (a dict + free list); everything that
 touches cell data is batched: ``admit_many`` / ``update_many`` are one
-scatter each, ``classify_all`` is ONE device call through the fused
-one-vs-many Pallas kernel and returns lineage status + Eq. 3 fp for
-every slot, ``all_pairs`` runs the tiled N x N kernel.
+scatter each, ``classify_all`` is ONE device call through the packed
+one-vs-many Pallas kernel, ``all_pairs`` gathers the alive rows and
+runs the symmetric triangle kernel over them only (dead slots cost no
+work and report all-False flags).
 
 Status codes (``FleetView.status``) are small ints so a whole fleet's
 classification is a single int8 vector:
@@ -30,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import clock as bc
-from repro.kernels import ops
+from repro.kernels import ops, pack
 
 __all__ = [
     "ClockRegistry",
@@ -79,26 +90,40 @@ class FleetView:
 
 
 @jax.jit
-def _scatter_rows(cells, sums, alive, idx, new_cells, new_sums):
-    cells = cells.at[idx].set(new_cells)
+def _scatter_rows(cells_u8, base, sums, alive, idx, new_u8, new_base, new_sums):
+    cells_u8 = cells_u8.at[idx].set(new_u8)
+    base = base.at[idx].set(new_base)
     sums = sums.at[idx].set(new_sums)
     alive = alive.at[idx].set(True)
-    return cells, sums, alive
+    return cells_u8, base, sums, alive
 
 
 @jax.jit
-def _union_rows(cells, mask, local_cells):
-    """max(local, max over masked rows); logical cells are >= 0 so the
-    masked-out fill of 0 is the identity."""
+def _union_rows_packed(cells_u8, base, mask, local_cells):
+    """max(local, max over masked logical rows); the widen fuses with the
+    reduce, so the only slab read is the u8 residuals."""
+    logical = cells_u8.astype(jnp.int32) + base[:, None]
+    masked = jnp.where(mask[:, None], logical, 0)
+    return jnp.maximum(local_cells, jnp.max(masked, axis=0))
+
+
+@jax.jit
+def _union_rows_i32(cells, mask, local_cells):
     masked = jnp.where(mask[:, None], cells, 0)
     return jnp.maximum(local_cells, jnp.max(masked, axis=0))
 
 
 @jax.jit
-def _broadcast_rows(cells, sums, mask, row, row_sum):
-    cells = jnp.where(mask[:, None], row[None, :], cells)
+def _broadcast_rows(cells_u8, base, sums, mask, row_u8, row_base, row_sum):
+    cells_u8 = jnp.where(mask[:, None], row_u8[None, :], cells_u8)
+    base = jnp.where(mask, row_base, base)
     sums = jnp.where(mask, row_sum, sums)
-    return cells, sums
+    return cells_u8, base, sums
+
+
+@jax.jit
+def _materialize(cells_u8, base):
+    return pack.unpack_rows(cells_u8, base)
 
 
 class ClockRegistry:
@@ -108,9 +133,14 @@ class ClockRegistry:
         self.capacity = capacity
         self.m = m
         self.k = k
-        self.cells = jnp.zeros((capacity, m), jnp.int32)
+        self.cells_u8 = jnp.zeros((capacity, m), jnp.uint8)
+        self.base = jnp.zeros((capacity,), jnp.int32)
         self.sums = jnp.zeros((capacity,), jnp.float32)
         self.alive = jnp.zeros((capacity,), bool)
+        self._alive_host = np.zeros(capacity, bool)
+        self._base_host = np.zeros(capacity, np.int64)
+        self._wide: dict[int, np.ndarray] = {}   # promoted int32 rows
+        self._mat: jax.Array | None = None       # materialized i32 cache
         self._slot_of: dict = {}
         self._free: list[int] = list(range(capacity - 1, -1, -1))
 
@@ -126,6 +156,31 @@ class ClockRegistry:
 
     def peer_ids(self) -> list:
         return list(self._slot_of)
+
+    @property
+    def packed(self) -> bool:
+        """True when every row is in the u8 fast-path representation."""
+        return not self._wide
+
+    @property
+    def cells(self) -> jax.Array:
+        """Materialized int32 logical cells (back-compat / debug view)."""
+        return self._materialized()
+
+    def _materialized(self) -> jax.Array:
+        if self._mat is None:
+            mat = _materialize(self.cells_u8, self.base)
+            if self._wide:
+                idx = jnp.asarray(sorted(self._wide), jnp.int32)
+                rows = jnp.asarray(
+                    np.stack([self._wide[s] for s in sorted(self._wide)]))
+                mat = mat.at[idx].set(rows)
+            self._mat = mat
+        return self._mat
+
+    def _uniform_base(self) -> bool:
+        b = self._base_host[self._alive_host]
+        return b.size == 0 or bool((b == b[0]).all())
 
     # ---- batched mutation ----
     def admit_many(self, peers: dict) -> dict:
@@ -164,20 +219,39 @@ class ClockRegistry:
         if not idx:
             return
         self.alive = self.alive.at[jnp.asarray(idx)].set(False)
+        self._alive_host[idx] = False
+        for slot in idx:
+            self._wide.pop(slot, None)
         self._free.extend(idx)
 
     def evict(self, peer_id) -> None:
         self.evict_many([peer_id])
 
     def _write(self, idx: list, clocks: list) -> None:
-        new_cells = jnp.stack([c.logical_cells().astype(jnp.int32) for c in clocks])
+        logical = jnp.stack(
+            [c.logical_cells().astype(jnp.int32) for c in clocks])
         new_sums = jnp.stack([bc.clock_sum(c) for c in clocks])
-        self.cells, self.sums, self.alive = _scatter_rows(
-            self.cells, self.sums, self.alive, jnp.asarray(idx), new_cells, new_sums)
+        new_u8, new_base, ok = pack.pack_rows(logical)
+        self.cells_u8, self.base, self.sums, self.alive = _scatter_rows(
+            self.cells_u8, self.base, self.sums, self.alive,
+            jnp.asarray(idx), new_u8, new_base, new_sums)
+        ok_h = np.asarray(ok)
+        self._base_host[idx] = np.asarray(new_base)
+        self._alive_host[idx] = True
+        for pos, slot in enumerate(idx):
+            if ok_h[pos]:
+                self._wide.pop(slot, None)     # demotion: row packs again
+            else:                              # promotion: span > U8_MAX
+                self._wide[slot] = np.asarray(logical[pos])
+        self._mat = None
 
     def get(self, peer_id) -> bc.BloomClock:
-        row = self.cells[self._slot_of[peer_id]]
-        return bc.BloomClock(cells=row, base=jnp.zeros((), jnp.int32), k=self.k)
+        slot = self._slot_of[peer_id]
+        if slot in self._wide:
+            return bc.BloomClock(cells=jnp.asarray(self._wide[slot]),
+                                 base=jnp.zeros((), jnp.int32), k=self.k)
+        return bc.BloomClock(cells=self.cells_u8[slot].astype(jnp.int32),
+                             base=self.base[slot], k=self.k)
 
     # ---- batched classification ----
     def classify_all(self, local: bc.BloomClock) -> FleetView:
@@ -188,10 +262,13 @@ class ClockRegistry:
         local past), a peer the local clock is ≼ is a DESCENDANT, and
         incomparable peers are FORKED (exact, §3).
         """
-        out = ops.classify_vs_many(
-            local.logical_cells().astype(jnp.int32), self.cells)
+        q = local.logical_cells().astype(jnp.int32)
+        if self.packed:
+            out = ops.classify_vs_many_packed(q, self.cells_u8, self.base)
+        else:
+            out = ops.classify_vs_many(q, self._materialized())
         h = jax.device_get(out)          # single host transfer for the dict
-        alive = np.asarray(self.alive)
+        alive = self._alive_host
         p_le_q = h["p_le_q"]
         q_le_p = h["q_le_p"]
         equal = p_le_q & q_le_p
@@ -208,26 +285,98 @@ class ClockRegistry:
             status=status,
             fp=fp,
             sums=h["sum_p"],
-            alive=alive,
+            alive=alive.copy(),
             local_sum=float(h["sum_q"]),
         )
 
     def all_pairs(self, **kw) -> dict:
-        """Tiled N x N compare over the whole slab (see ops.compare_matrix)."""
-        return ops.compare_matrix(self.cells, self.cells, **kw)
+        """Tiled all-pairs compare over the ALIVE rows only.
+
+        Dead slots are masked out before the kernel (the alive rows are
+        gathered into a dense sub-slab, so dead slots cost no compute)
+        and report ``a_le_b = b_le_a = concurrent = False`` and
+        ``fp = row_sums = 0`` — no misleading verdicts from stale cells.
+        """
+        cap = self.capacity
+        aidx = np.flatnonzero(self._alive_host)
+        if aidx.size == 0:
+            false = jnp.zeros((cap, cap), bool)
+            return {
+                "a_le_b": false, "b_le_a": false, "concurrent": false,
+                "fp": jnp.zeros((cap, cap), jnp.float32),
+                "row_sums": jnp.zeros((cap,), jnp.float32),
+                "col_sums": jnp.zeros((cap,), jnp.float32),
+            }
+        if aidx.size == cap and self.packed:
+            return ops.compare_matrix_packed(
+                self.cells_u8, self.base,
+                uniform_base=self._uniform_base(), **kw)
+        jidx = jnp.asarray(aidx)
+        if self.packed:
+            sub = ops.compare_matrix_packed(
+                jnp.take(self.cells_u8, jidx, axis=0),
+                jnp.take(self.base, jidx),
+                uniform_base=self._uniform_base(), **kw)
+        else:
+            rows = jnp.take(self._materialized(), jidx, axis=0)
+            sub = ops.compare_matrix(rows, rows, **kw)
+        return _expand_alive(sub, jidx, cap)
 
     # ---- batched merge ----
     def union(self, mask: np.ndarray, local: bc.BloomClock) -> bc.BloomClock:
         """Merge the local clock with every masked row (one device call)."""
-        merged = _union_rows(
-            self.cells, jnp.asarray(mask, bool),
-            local.logical_cells().astype(jnp.int32))
+        local_cells = local.logical_cells().astype(jnp.int32)
+        mask = jnp.asarray(mask, bool)
+        if self.packed:
+            merged = _union_rows_packed(self.cells_u8, self.base, mask,
+                                        local_cells)
+        else:
+            merged = _union_rows_i32(self._materialized(), mask, local_cells)
         return bc.BloomClock(
             cells=merged, base=jnp.zeros((), jnp.int32), k=self.k)
 
-    def broadcast(self, mask: np.ndarray, clock: bc.BloomClock) -> None:
-        """Write one clock into every masked row (anti-entropy push-back)."""
-        row = clock.logical_cells().astype(jnp.int32)
-        self.cells, self.sums = _broadcast_rows(
-            self.cells, self.sums, jnp.asarray(mask, bool), row,
-            bc.clock_sum(clock))
+    def broadcast(self, mask: np.ndarray, clock: bc.BloomClock) -> bool:
+        """Write one clock into every masked row (anti-entropy push-back).
+
+        The row ships in wire form: u8 residuals + one base scalar
+        (§4 compression), 4x less traffic than an int32 row.  A row too
+        wide for u8 promotes the masked slots instead.  Returns whether
+        the row went out packed (False = int32 promoted-row fallback).
+        """
+        logical = clock.logical_cells().astype(jnp.int32)
+        row_u8, row_base, ok = pack.pack_rows(logical[None])
+        row_sum = bc.clock_sum(clock)
+        mask_d = jnp.asarray(mask, bool)
+        self.cells_u8, self.base, self.sums = _broadcast_rows(
+            self.cells_u8, self.base, self.sums, mask_d,
+            row_u8[0], row_base[0], row_sum)
+        midx = np.flatnonzero(np.asarray(mask))
+        self._base_host[midx] = int(row_base[0])
+        packed_ok = bool(ok[0])
+        if packed_ok:
+            for slot in midx:
+                self._wide.pop(int(slot), None)
+        else:
+            row_np = np.asarray(logical)
+            for slot in midx:
+                self._wide[int(slot)] = row_np
+        self._mat = None
+        return packed_ok
+
+
+def _expand_alive(sub: dict, jidx: jax.Array, cap: int) -> dict:
+    """Scatter an alive-compacted result back to [capacity, capacity]."""
+    rows = jidx[:, None]
+    cols = jidx[None, :]
+    def mat(x, fill, dtype):
+        return jnp.full((cap, cap), fill, dtype).at[rows, cols].set(x)
+    def vec(x):
+        return jnp.zeros((cap,), x.dtype).at[jidx].set(x)
+    return {
+        "a_le_b": mat(sub["a_le_b"], False, bool),
+        "b_le_a": mat(sub["b_le_a"], False, bool),
+        "concurrent": mat(sub["concurrent"], False, bool),
+        "fp": mat(sub["fp"], 0.0, jnp.float32),
+        "row_sums": vec(sub["row_sums"]),
+        "col_sums": vec(sub["col_sums"]),
+    }

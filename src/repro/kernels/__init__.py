@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer for the bloom-clock hot paths.
+
+- ``bloom_tick``     batched event recording (scatter-add per probe)
+- ``bloom_compare``  fused pairwise merge + compare + Eq. 3 fp
+- ``bloom_matrix``   one-vs-many and N x N comparison engines, including
+                     the packed-u8 triangle sweep and the MXU
+                     (dot_general thermometer) dominance reduction
+- ``pack``           quantized slab layout: u8 window residuals + base
+- ``autotune``       measured block-shape/engine table the wrappers use
+- ``ops``            the public padded/dispatched entry points
+- ``ref``            pure-jnp oracles for tests
+"""

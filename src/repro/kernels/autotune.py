@@ -1,0 +1,284 @@
+"""Measured block-shape selection for the bulk comparison kernels.
+
+The right (engine, bi, bj, bm, bn) for ``compare_matrix`` /
+``classify_vs_many`` depends on the machine: interpret mode on CPU wants
+few, cache-sized grid steps; a real TPU wants every working set inside
+VMEM and, for narrow §4 windows, the MXU thermometer engine whose FLOPs
+scale with the value span.  Hardcoded defaults cannot satisfy both, so
+this module runs a measured sweep over a candidate space filtered by a
+VMEM-fit model and caches the winners in a JSON table keyed by
+
+    op | backend | N-bucket | M-bucket | m-bucket
+
+(shape buckets are powers of two, rounded up, so one sweep covers a
+band of nearby shapes).  ``kernels.ops`` consults ``lookup`` on every
+call and falls back to conservative per-backend defaults when the table
+has no entry.  Regenerate the shipped table with
+
+    PYTHONPATH=src python -m repro.kernels.autotune --write
+
+which sweeps the standard shapes on the current machine and rewrites
+``autotune_table.json`` next to this file (or ``--out PATH`` /
+``$REPRO_AUTOTUNE_TABLE`` for a private table).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from pathlib import Path
+
+__all__ = [
+    "lookup",
+    "autotune_matrix",
+    "autotune_one_vs_many",
+    "table_path",
+    "load_table",
+    "save_table",
+]
+
+_DEFAULT_TABLE = Path(__file__).parent / "autotune_table.json"
+_ENV = "REPRO_AUTOTUNE_TABLE"
+
+# VMEM-fit model budgets (bytes).  Interpret mode has no VMEM, but the
+# same model bounds host scratch so sweeps stay sane.
+_VMEM_BUDGET = {"tpu": 12 * 2**20, "interpret": 512 * 2**20}
+
+_table_cache: dict | None = None
+_table_cache_path: str | None = None
+
+
+def table_path() -> Path:
+    return Path(os.environ.get(_ENV, _DEFAULT_TABLE))
+
+
+def load_table() -> dict:
+    global _table_cache, _table_cache_path
+    path = table_path()
+    if _table_cache is not None and _table_cache_path == str(path):
+        return _table_cache
+    try:
+        with open(path) as f:
+            _table_cache = json.load(f)
+    except (OSError, ValueError):
+        _table_cache = {}
+    _table_cache_path = str(path)
+    return _table_cache
+
+
+def save_table(table: dict, path: Path | None = None) -> Path:
+    global _table_cache, _table_cache_path
+    path = path or table_path()
+    with open(path, "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+        f.write("\n")
+    _table_cache, _table_cache_path = table, str(path)
+    return path
+
+
+def _bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def _backend(interpret: bool) -> str:
+    return "interpret" if interpret else "tpu"
+
+
+def key_for(op: str, N: int, M: int, m: int, interpret: bool) -> str:
+    return f"{op}|{_backend(interpret)}|N{_bucket(N)}|M{_bucket(M)}|m{_bucket(m)}"
+
+
+def lookup(op: str, N: int, M: int, m: int, interpret: bool) -> dict | None:
+    """Best known config for this op/shape band, or None."""
+    return load_table().get(key_for(op, N, M, m, interpret))
+
+
+# ---------------------------------------------------------------------------
+# VMEM-fit model
+# ---------------------------------------------------------------------------
+
+def vmem_bytes(engine: str, bi: int, bj: int, bm: int,
+               n_thresholds: int = 0) -> int:
+    """Peak per-step working set of one grid step of a matrix engine."""
+    if engine == "mxu":
+        enc = (bi + bj) * bm * n_thresholds * 4      # f32 thermometer codes
+        return enc + (bi + bj) * bm + bi * bj * 4
+    if engine in ("tri", "full"):
+        d = bi * bj * bm * 2                         # int16 difference
+        return d + (bi + bj) * bm + 2 * bi * bj
+    if engine == "i32":
+        d = bi * bj * bm                             # bool compares (x2 dirs)
+        return 2 * d + (bi + bj) * bm * 4 + 3 * bi * bj * 4
+    raise ValueError(engine)
+
+
+def _fits(engine: str, bi: int, bj: int, bm: int, interpret: bool,
+          n_thresholds: int = 0) -> bool:
+    return vmem_bytes(engine, bi, bj, bm, n_thresholds) <= \
+        _VMEM_BUDGET[_backend(interpret)]
+
+
+# ---------------------------------------------------------------------------
+# measured sweeps
+# ---------------------------------------------------------------------------
+
+def _divisor_blocks(size: int, want: tuple, mult: int) -> list:
+    return [b for b in want if b % mult == 0 and b <= size and size % b == 0]
+
+
+def _measure(fn, reps: int = 3) -> float:
+    import jax
+    jax.block_until_ready(jax.tree.leaves(fn()))     # warm / compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jax.tree.leaves(fn()))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _rand_packed(N: int, m: int, span: int, seed: int = 0):
+    import jax.numpy as jnp
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    cells = jnp.asarray(rng.integers(0, span, (N, m)), jnp.uint8)
+    base = jnp.zeros((N, 1), jnp.int32)
+    return cells, base
+
+
+def autotune_matrix(N: int, m: int, *, span: int = 30,
+                    interpret: bool | None = None, verbose: bool = False):
+    """Race matrix engines x block shapes at [N, m]; return best config."""
+    import jax
+    from repro.kernels import ops
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    cells, base = _rand_packed(N, m, span)
+    cells_i32 = cells.astype("int32")
+
+    candidates = []
+    for bi in (8, 64, 128, 256):
+        for bm in (128, 256, 512, 1024):
+            if not (_divisor_blocks(N, (bi,), 8)
+                    and _divisor_blocks(m, (bm,), 128)):
+                continue
+            steps = (N // bi) ** 2 * (m // bm)
+            if interpret and steps > 2048:   # per-step overhead would drown it
+                continue
+            if _fits("tri", bi, bi, bm, interpret):
+                candidates.append(("tri", bi, bi, bm))
+            if _fits("i32", bi, bi, bm, interpret):
+                candidates.append(("i32", bi, bi, bm))
+            if span <= ops.MXU_SPAN_MAX and _fits(
+                    "mxu", bi, bi, bm, interpret, n_thresholds=span):
+                candidates.append(("mxu", bi, bi, bm))
+
+    results = []
+    for engine, bi, bj, bm in candidates:
+        try:
+            if engine == "i32":
+                fn = lambda: ops.compare_matrix(
+                    cells_i32, cells_i32, engine="i32",
+                    bi=bi, bj=bj, bm=bm, interpret=interpret)
+            else:
+                fn = lambda: ops.compare_matrix_packed(
+                    cells, base, engine=engine,
+                    bi=bi, bj=bj, bm=bm, interpret=interpret)
+            dt = _measure(fn)
+        except Exception as e:            # candidate invalid on this backend
+            if verbose:
+                print(f"  matrix {engine} bi={bi} bm={bm}: FAILED {e}")
+            continue
+        results.append({"engine": engine, "bi": bi, "bj": bj, "bm": bm,
+                        "us": dt * 1e6})
+        if verbose:
+            print(f"  matrix {engine} bi={bi} bj={bj} bm={bm}: {dt*1e3:.1f} ms")
+    if not results:
+        raise RuntimeError(f"no viable matrix candidates for N={N} m={m}")
+    return min(results, key=lambda r: r["us"])
+
+
+def autotune_one_vs_many(N: int, m: int, *, span: int = 30,
+                         interpret: bool | None = None,
+                         verbose: bool = False):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    cells, base = _rand_packed(N, m, span)
+    q = cells[0].astype(jnp.int32)
+
+    results = []
+    for bn in (8, 32, 128, 256):
+        for bm in (256, 512, 1024):
+            if not (_divisor_blocks(N, (bn,), 8)
+                    and _divisor_blocks(m, (bm,), 128)):
+                continue
+            try:
+                dt = _measure(lambda: ops.classify_vs_many_packed(
+                    q, cells, base, bn=bn, bm=bm, interpret=interpret))
+            except Exception:
+                continue
+            results.append({"engine": "packed", "bn": bn, "bm": bm,
+                            "us": dt * 1e6})
+            if verbose:
+                print(f"  one_vs_many bn={bn} bm={bm}: {dt*1e3:.2f} ms")
+    if not results:
+        raise RuntimeError(f"no viable one_vs_many candidates N={N} m={m}")
+    return min(results, key=lambda r: r["us"])
+
+
+def autotune_shapes(shapes, *, interpret: bool | None = None,
+                    verbose: bool = False) -> dict:
+    """Sweep (N, m) shapes; returns {table_key: best_config}."""
+    out = {}
+    for N, m in shapes:
+        if verbose:
+            print(f"[autotune] matrix N={N} m={m}")
+        best = autotune_matrix(N, m, interpret=interpret, verbose=verbose)
+        out[key_for("matrix", N, N, m, interpret
+                    if interpret is not None else _is_interp())] = best
+        if verbose:
+            print(f"  -> {best}")
+            print(f"[autotune] one_vs_many N={N} m={m}")
+        best = autotune_one_vs_many(N, m, interpret=interpret, verbose=verbose)
+        out[key_for("one_vs_many", N, N, m, interpret
+                    if interpret is not None else _is_interp())] = best
+        if verbose:
+            print(f"  -> {best}")
+    return out
+
+
+def _is_interp() -> bool:
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--sizes", nargs="*", default=["256x512", "1024x1024"],
+                   help="NxM cell-slab shapes to sweep (peers x cells)")
+    p.add_argument("--write", action="store_true",
+                   help="merge results into the autotune table on disk")
+    p.add_argument("--out", type=Path, default=None)
+    args = p.parse_args(argv)
+    shapes = [tuple(int(v) for v in s.split("x")) for s in args.sizes]
+    results = autotune_shapes(shapes, verbose=True)
+    if args.write:
+        table = dict(load_table())
+        table.update(results)
+        path = save_table(table, args.out)
+        print(f"wrote {len(results)} entries -> {path}")
+    else:
+        print(json.dumps(results, indent=1, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

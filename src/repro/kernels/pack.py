@@ -1,0 +1,61 @@
+"""Quantized slab packing: int32 bloom-clock cells <-> u8 residuals + base.
+
+The paper's §4 observation is that within a moving window the cells of a
+bloom clock stay within a byte of each other, so a slab of N peer clocks
+does not need N * m * 4 bytes: store per row the minimum logical value
+(``base``, one int32 lane per slot) and the residuals ``cells - base``
+as u8.  That cuts HBM traffic and VMEM footprint of every bulk compare
+4x, which is exactly what the comparison kernels are bound by.
+
+Packing is *lossless or refused*: a row whose residual span exceeds
+``U8_MAX`` cannot be represented and is reported via the ``ok`` mask so
+the caller can promote it (keep it int32) instead of silently clipping.
+``repro.fleet.ClockRegistry`` uses that mask to keep a small int32
+side-store for promoted rows; everything else stays packed.
+
+All functions are jitted and shape-generic ([N, m] slabs or single [m]
+rows via ``pack_rows(x[None])``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["U8_MAX", "pack_rows", "unpack_rows", "rows_fit_u8"]
+
+U8_MAX = 255
+
+
+@jax.jit
+def pack_rows(cells: jax.Array, base: jax.Array | None = None):
+    """Pack int32 logical rows into (residuals u8, base i32, ok bool).
+
+    cells: [N, m] int32 residual-or-logical cell values.
+    base:  [N] int32 offset already applied to ``cells`` (None = zeros).
+
+    Per row the minimum is lifted into the base (§4 compression), so the
+    returned residuals always have ``min == 0``.  ``ok[i]`` is False
+    when the row's span exceeds U8_MAX; its residuals are clipped and
+    MUST NOT be used — the caller promotes such rows.
+    """
+    cells = jnp.asarray(cells, jnp.int32)
+    if base is None:
+        base = jnp.zeros(cells.shape[:-1], jnp.int32)
+    mn = jnp.min(cells, axis=-1)
+    span = jnp.max(cells, axis=-1) - mn
+    resid = cells - mn[..., None]
+    packed = jnp.clip(resid, 0, U8_MAX).astype(jnp.uint8)
+    return packed, base + mn, span <= U8_MAX
+
+
+@jax.jit
+def unpack_rows(packed: jax.Array, base: jax.Array) -> jax.Array:
+    """Inverse of ``pack_rows``: materialize int32 logical cells."""
+    return packed.astype(jnp.int32) + jnp.asarray(base, jnp.int32)[..., None]
+
+
+@jax.jit
+def rows_fit_u8(cells: jax.Array) -> jax.Array:
+    """[N] bool: can each int32 row be packed losslessly?"""
+    cells = jnp.asarray(cells, jnp.int32)
+    return (jnp.max(cells, axis=-1) - jnp.min(cells, axis=-1)) <= U8_MAX

@@ -37,7 +37,7 @@ from repro.core import history as hist
 from repro.core.hashing import stable_event_id
 from repro.kernels import ops
 
-__all__ = ["ClockConfig", "ClockRuntime", "LineageStatus"]
+__all__ = ["ClockConfig", "ClockRuntime", "LineageStatus", "CheckpointLineage"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +54,29 @@ class LineageStatus:
     SAME = "same"
     DESCENDANT = "descendant"    # mine ≼ other: other is ahead of me
     FORKED = "forked"            # concurrent: split brain / missed sync
+
+
+@dataclasses.dataclass
+class CheckpointLineage:
+    """One ``classify_vs_many`` call over a whole checkpoint directory.
+
+    Entries are sorted by step; ``safe`` mirrors ``admit_restore``'s
+    decision rule per checkpoint.
+    """
+
+    steps: np.ndarray            # int64 [S]
+    status: list                 # LineageStatus string per step
+    fp: np.ndarray               # float32 [S] Eq. 3 fp of the claim
+    safe: np.ndarray             # bool [S] restorable without forking
+
+    def latest_safe(self) -> Optional[int]:
+        idx = np.flatnonzero(self.safe)
+        return int(self.steps[idx[-1]]) if idx.size else None
+
+    def summary(self) -> str:
+        return " ".join(
+            f"step_{s}:{st}{'' if ok else '(unsafe)'}"
+            for s, st, ok in zip(self.steps, self.status, self.safe))
 
 
 class ClockRuntime:
@@ -130,6 +153,57 @@ class ClockRuntime:
             return fp <= self.cfg.fp_threshold or float(bc.clock_sum(self.clock)) == 0.0, status, fp
         return True, status, fp
 
+    def classify_checkpoints(self, manager) -> CheckpointLineage:
+        """Classify a WHOLE checkpoint directory against the live clock
+        in one ``classify_vs_many`` device call (manifests only — no
+        state tensors are read).
+
+        Replaces the one-``admit_restore``-per-checkpoint loop: one
+        kernel sweep over the stacked manifest clocks, then the same
+        decision rule.  ANCESTOR candidates that miss the fp gate get
+        the §3 history refinement (there are usually zero or one).
+        """
+        entries = manager.clock_manifests()
+        steps = np.asarray([s for s, _ in entries], np.int64)
+        if not entries:
+            return CheckpointLineage(
+                steps=steps, status=[],
+                fp=np.zeros(0, np.float32), safe=np.zeros(0, bool))
+        clocks = [self.clock_from_snapshot(man["clock"]) for _, man in entries]
+        stacked = jnp.stack(
+            [c.logical_cells().astype(jnp.int32) for c in clocks])
+        out = ops.classify_vs_many(
+            self.clock.logical_cells().astype(jnp.int32), stacked)
+        h = jax.device_get(out)
+        p_le_q, q_le_p = h["p_le_q"], h["q_le_p"]
+        live_empty = float(bc.clock_sum(self.clock)) == 0.0
+        status, fp, safe = [], [], []
+        for i in range(len(entries)):
+            if p_le_q[i] and q_le_p[i]:
+                st, f, ok = LineageStatus.SAME, 0.0, True
+            elif p_le_q[i]:
+                st, f = LineageStatus.ANCESTOR, float(h["fp_p_before_q"][i])
+                if f > self.cfg.fp_threshold and not live_empty:
+                    f = min(f, self.refined_fp(clocks[i]))
+                ok = f <= self.cfg.fp_threshold or live_empty
+            elif q_le_p[i]:
+                st, f, ok = (LineageStatus.DESCENDANT,
+                             float(h["fp_q_before_p"][i]), True)
+            else:
+                st, f, ok = LineageStatus.FORKED, 0.0, False
+            status.append(st)
+            fp.append(f)
+            safe.append(ok)
+        return CheckpointLineage(
+            steps=steps, status=status,
+            fp=np.asarray(fp, np.float32), safe=np.asarray(safe, bool))
+
+    def admit_restore_latest(self, manager) -> tuple[Optional[int], CheckpointLineage]:
+        """Newest causally-safe checkpoint step in the directory (or
+        None), plus the full per-checkpoint lineage."""
+        lineage = self.classify_checkpoints(manager)
+        return lineage.latest_safe(), lineage
+
     def admit_merge(self, peer_clock: bc.BloomClock) -> tuple[bool, str, float]:
         """Async outer-loop guard: merge a peer's update?
 
@@ -155,17 +229,10 @@ class ClockRuntime:
 
     # ---- wire format ----
     def snapshot(self) -> dict:
-        c = bc.compress(self.clock)
-        return {
-            "cells": np.asarray(c.cells),
-            "base": int(c.base),
-            "k": c.k,
-        }
+        """Wire/persist form: §4 compression + u8 residual quantization
+        when the window fits a byte (see ``core.clock.to_wire``)."""
+        return bc.to_wire(self.clock)
 
     @staticmethod
     def clock_from_snapshot(snap: dict) -> bc.BloomClock:
-        return bc.BloomClock(
-            cells=jnp.asarray(snap["cells"], jnp.int32),
-            base=jnp.asarray(int(snap["base"]), jnp.int32),
-            k=int(snap["k"]),
-        )
+        return bc.from_wire(snap)
