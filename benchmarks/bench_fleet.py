@@ -50,10 +50,12 @@ def _time(fn, n: int = 3) -> float:
 
 
 def _rec(records: list, op: str, shape: str, seconds: float,
-         reference: str | None = None, speedup: float | None = None) -> None:
+         reference: str | None = None, speedup: float | None = None,
+         shards: int = 1) -> None:
     records.append({
         "op": op,
         "shape": shape,
+        "shards": shards,
         "ms": round(seconds * 1e3, 4),
         "speedup_vs_reference": round(speedup, 3) if speedup else None,
         "reference": reference,
@@ -110,14 +112,60 @@ def bench_all_pairs(n: int = 1024, m: int = 1024, verify: bool = True,
     return rows
 
 
-def _filled_registry(n: int, m: int, seed: int = 0) -> ClockRegistry:
-    registry = ClockRegistry(capacity=n, m=m, k=4)
+def _filled_registry(n: int, m: int, seed: int = 0, mesh=None) -> ClockRegistry:
+    registry = ClockRegistry(capacity=n, m=m, k=4, mesh=mesh)
     cells = np.asarray(_rand_cells(n, m, seed))
     registry.admit_many({
         f"peer{i}": bc.BloomClock(jnp.asarray(cells[i]),
                                   jnp.zeros((), jnp.int32), 4)
         for i in range(n)})
     return registry
+
+
+def bench_sharded(n: int, m: int, shards: int,
+                  records: list | None = None) -> list:
+    """Mesh-sharded classify_all / all_pairs (shard_map + ppermute ring)
+    vs the single-device registry — results checked bit-identical first."""
+    from repro.launch.mesh import make_fleet_mesh
+
+    records = records if records is not None else []
+    rows = []
+    shape = f"n{n}_m{m}"
+    if shards > len(jax.devices()):
+        rows.append((f"sharded_skip_{shape}", 0.0,
+                     f"need {shards} devices, have {len(jax.devices())} "
+                     "(set XLA_FLAGS=--xla_force_host_platform_device_count)"))
+        # leave a marker in the JSON too, so the perf-trajectory tooling
+        # sees "requested but skipped" instead of a silent gap
+        _rec(records, "sharded_benches_skipped", shape, 0.0,
+             reference=f"need_{shards}_devices_have_{len(jax.devices())}",
+             shards=shards)
+        return rows
+    ref = _filled_registry(n, m)
+    reg = _filled_registry(n, m, mesh=make_fleet_mesh(shards))
+    local = ref.get("peer0")
+
+    v_ref, v_got = ref.classify_all(local), reg.classify_all(local)
+    assert (v_got.status == v_ref.status).all() and (v_got.fp == v_ref.fp).all()
+    p_ref = jax.device_get(ref.all_pairs())
+    p_got = jax.device_get(reg.all_pairs())
+    assert np.array_equal(np.asarray(p_got["a_le_b"], bool),
+                          np.asarray(p_ref["a_le_b"], bool))
+    assert (np.asarray(p_got["fp"]) == np.asarray(p_ref["fp"])).all()
+
+    t1 = _time(lambda: ref.classify_all(local))
+    ts = _time(lambda: reg.classify_all(local))
+    rows.append((f"classify_all_sharded{shards}_{shape}", ts * 1e6,
+                 f"bit-identical; 1-device {t1 * 1e6:.0f}us"))
+    _rec(records, "classify_all_sharded", shape, ts,
+         reference="classify_all_1shard", speedup=t1 / ts, shards=shards)
+    t1 = _time(lambda: ref.all_pairs()["a_le_b"], n=1)
+    ts = _time(lambda: reg.all_pairs()["a_le_b"], n=1)
+    rows.append((f"all_pairs_sharded{shards}_{shape}", ts * 1e6,
+                 f"ppermute ring, bit-identical; 1-device {t1 * 1e6:.0f}us"))
+    _rec(records, "all_pairs_ring", shape, ts,
+         reference="all_pairs_1shard", speedup=t1 / ts, shards=shards)
+    return rows
 
 
 def bench_classify_all(n: int = 1024, m: int = 1024,
@@ -180,6 +228,9 @@ def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true",
                    help="small shapes (CI smoke, interpret mode on CPU)")
+    p.add_argument("--shards", type=int, default=1,
+                   help="also bench the mesh-sharded registry over this many "
+                        "devices (shard_map classify_all + ppermute all_pairs)")
     p.add_argument("--json", default="BENCH_fleet.json",
                    help="machine-readable output path")
     args = p.parse_args(argv)
@@ -188,6 +239,8 @@ def main(argv=None) -> None:
     rows = (bench_all_pairs(n=n, m=m, records=records)
             + bench_classify_all(n=n, m=m, records=records)
             + bench_gossip(n=n, m=m, records=records))
+    if args.shards > 1:
+        rows += bench_sharded(n=n, m=m, shards=args.shards, records=records)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f'{name},{us:.2f},"{derived}"')

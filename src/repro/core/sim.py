@@ -206,7 +206,7 @@ class GossipSimResult:
 
 
 def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
-                   gossip_cfg=None) -> GossipSimResult:
+                   gossip_cfg=None, registry_factory=None) -> GossipSimResult:
     """Replay a random execution and interleave REAL fleet gossip rounds,
     scoring every verdict against the exact vector-clock truth.
 
@@ -222,6 +222,11 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
     - accepted merges are applied to BOTH clock families (receive rule),
       so causality stays aligned across rounds, including the
       anti-entropy push-back to accepted peers.
+
+    ``registry_factory(capacity, m, k) -> ClockRegistry`` swaps the
+    observer's registry construction — the sharded-fleet harness passes
+    a mesh-backed factory so every audited verdict also exercises the
+    shard_map kernel paths.
     """
     from repro.fleet import gossip as fg
     from repro.fleet import monitor as fm
@@ -235,7 +240,10 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
     n, m, k = cfg.n_nodes, cfg.m, cfg.k
     idx = _event_probe_indices(cfg)
 
-    registry = fr.ClockRegistry(capacity=max(8, n), m=m, k=k)
+    if registry_factory is None:
+        registry_factory = lambda cap, mm, kk: fr.ClockRegistry(
+            capacity=cap, m=mm, k=kk)
+    registry = registry_factory(max(8, n), m, k)
     peers = [p for p in range(n) if p != observer]
 
     def as_clock(cells_row: np.ndarray) -> bc.BloomClock:

@@ -5,7 +5,9 @@ view of the fleet, driven end-to-end by the fused kernels (no per-peer
 Python on the hot path):
 
 1. ``classify_all``: one device call classifies every peer against the
-   local clock (lineage + Eq. 3 confidence).
+   local clock (lineage + Eq. 3 confidence).  A mesh-sharded registry
+   runs it shard_map'ed over the row shards transparently — the round's
+   policy and results are identical for every shard count.
 2. policy, on [N] host vectors: FORKED peers are quarantined (their
    events diverged from ours — merging would launder a causality
    violation); stragglers (clock-sum gap above ``straggler_gap`` below
@@ -56,6 +58,7 @@ class GossipReport:
     unconfident: np.ndarray       # comparable but fp above threshold
     view: reg.FleetView           # the classification the round acted on
     pushback_bytes: int = 0       # wire cost of the outbound half (§4 form)
+    shards: int = 1               # device shards the registry slab spans
 
     @property
     def n_accepted(self) -> int:
@@ -111,4 +114,5 @@ def gossip_round(
         unconfident=unconfident,
         view=view,
         pushback_bytes=pushback_bytes,
+        shards=registry.n_shards,
     )

@@ -41,13 +41,15 @@ class FleetHealth:
     fp_hist: np.ndarray           # counts per log10-fp bin (ordered pairs)
     fp_bin_edges: np.ndarray      # len(fp_hist) + 1 edges, log10(fp)
     mean_predicted_fp: float      # mean Eq. 3 fp over ordered pairs
+    shards: int = 1               # device shards the registry slab spans
 
     def summary(self) -> str:
         return (
             f"alive={self.n_alive} components={self.n_components} "
             f"comparable={self.comparable_fraction:.3f} "
             f"stragglers={int(self.straggler_mask.sum())} "
-            f"mean_pred_fp={self.mean_predicted_fp:.3e}"
+            f"mean_pred_fp={self.mean_predicted_fp:.3e} "
+            f"shards={self.shards}"
         )
 
 
@@ -132,4 +134,5 @@ def fleet_health(
         fp_hist=hist,
         fp_bin_edges=edges,
         mean_predicted_fp=float(fps.mean()) if fps.size else 0.0,
+        shards=registry.n_shards,
     )

@@ -31,6 +31,22 @@ classification is a single int8 vector:
     DEAD < 0: slot empty/evicted;  ANCESTOR: peer ≼ local;
     SAME: equal;  DESCENDANT: local ≼ peer;  FORKED: concurrent
     (exact — no false negatives, paper §3).
+
+**Sharded mode** (``ClockRegistry(..., mesh=mesh, axis="fleet")``): the
+slab arrays carry a row-sharded ``NamedSharding`` over one mesh axis —
+``cells_u8`` lives as ``[N/d, m]`` per-device shards so a fleet can
+outgrow any single device's memory.  ``classify_all`` becomes a
+``shard_map``'d one-vs-many kernel (query replicated, zero cross-device
+traffic) and ``all_pairs`` a block-row ring: each device circulates a
+column shard via ``ppermute`` and fills its ``[N/d, N]`` block-row with
+the packed full-rect engine.  Both paths are bit-identical to the
+single-device packed engines for every shard count — the multi-device
+harness (``tests/test_sharded_fleet.py``) enforces it.  Mutations
+(admit / evict / update / union / broadcast) stay one batched device
+call; XLA routes each scattered row to its owning shard and the result
+is re-placed onto the registry's sharding.  Slot assignment remains a
+host-side dict, so slot ``s`` deterministically lives on device
+``s // (N / d)``.
 """
 from __future__ import annotations
 
@@ -42,6 +58,7 @@ import numpy as np
 
 from repro.core import clock as bc
 from repro.kernels import ops, pack
+from repro.sharding import FLEET_AXIS, slab_shardings
 
 __all__ = [
     "ClockRegistry",
@@ -108,12 +125,6 @@ def _union_rows_packed(cells_u8, base, mask, local_cells):
 
 
 @jax.jit
-def _union_rows_i32(cells, mask, local_cells):
-    masked = jnp.where(mask[:, None], cells, 0)
-    return jnp.maximum(local_cells, jnp.max(masked, axis=0))
-
-
-@jax.jit
 def _broadcast_rows(cells_u8, base, sums, mask, row_u8, row_base, row_sum):
     cells_u8 = jnp.where(mask[:, None], row_u8[None, :], cells_u8)
     base = jnp.where(mask, row_base, base)
@@ -127,22 +138,50 @@ def _materialize(cells_u8, base):
 
 
 class ClockRegistry:
-    """Sharded-slab peer clock registry (one shard = one device slab)."""
+    """Peer clock registry: one device slab, or mesh-sharded row shards."""
 
-    def __init__(self, capacity: int, m: int, k: int = 4):
+    def __init__(self, capacity: int, m: int, k: int = 4, *,
+                 mesh=None, axis: str = FLEET_AXIS):
         self.capacity = capacity
         self.m = m
         self.k = k
-        self.cells_u8 = jnp.zeros((capacity, m), jnp.uint8)
-        self.base = jnp.zeros((capacity,), jnp.int32)
-        self.sums = jnp.zeros((capacity,), jnp.float32)
-        self.alive = jnp.zeros((capacity,), bool)
+        self.mesh = mesh
+        self.axis = axis if mesh is not None else None
+        if mesh is not None:
+            shards = mesh.shape[axis]
+            if capacity % shards:
+                raise ValueError(
+                    f"capacity {capacity} not divisible by mesh axis "
+                    f"{axis!r} extent {shards}")
+            self._slab_sharding, self._vec_sharding = slab_shardings(
+                mesh, axis)
+        else:
+            self._slab_sharding = self._vec_sharding = None
+        self.cells_u8 = self._place2d(jnp.zeros((capacity, m), jnp.uint8))
+        self.base = self._place1d(jnp.zeros((capacity,), jnp.int32))
+        self.sums = self._place1d(jnp.zeros((capacity,), jnp.float32))
+        self.alive = self._place1d(jnp.zeros((capacity,), bool))
         self._alive_host = np.zeros(capacity, bool)
         self._base_host = np.zeros(capacity, np.int64)
         self._wide: dict[int, np.ndarray] = {}   # promoted int32 rows
         self._mat: jax.Array | None = None       # materialized i32 cache
         self._slot_of: dict = {}
         self._free: list[int] = list(range(capacity - 1, -1, -1))
+
+    @property
+    def n_shards(self) -> int:
+        return 1 if self.mesh is None else self.mesh.shape[self.axis]
+
+    def _place2d(self, x: jax.Array) -> jax.Array:
+        """Pin a [N, m] slab to the registry's row sharding (no-op when
+        unsharded).  Every mutation re-places its result so XLA's output
+        placement choices never silently gather the slab."""
+        return x if self._slab_sharding is None else jax.device_put(
+            x, self._slab_sharding)
+
+    def _place1d(self, x: jax.Array) -> jax.Array:
+        return x if self._vec_sharding is None else jax.device_put(
+            x, self._vec_sharding)
 
     # ---- membership ----
     def __len__(self) -> int:
@@ -215,10 +254,15 @@ class ClockRegistry:
         self.update_many({peer_id: clock})
 
     def evict_many(self, peer_ids) -> None:
-        idx = [self._slot_of.pop(pid) for pid in peer_ids]
+        peer_ids = list(dict.fromkeys(peer_ids))   # dedupe, keep order
+        # resolve every slot BEFORE mutating: an unknown peer_id raises
+        # with the registry untouched instead of half-evicted
+        idx = [self._slot_of[pid] for pid in peer_ids]
         if not idx:
             return
-        self.alive = self.alive.at[jnp.asarray(idx)].set(False)
+        for pid in peer_ids:
+            del self._slot_of[pid]
+        self.alive = self._place1d(self.alive.at[jnp.asarray(idx)].set(False))
         self._alive_host[idx] = False
         for slot in idx:
             self._wide.pop(slot, None)
@@ -232,9 +276,13 @@ class ClockRegistry:
             [c.logical_cells().astype(jnp.int32) for c in clocks])
         new_sums = jnp.stack([bc.clock_sum(c) for c in clocks])
         new_u8, new_base, ok = pack.pack_rows(logical)
-        self.cells_u8, self.base, self.sums, self.alive = _scatter_rows(
+        cells_u8, base, sums, alive = _scatter_rows(
             self.cells_u8, self.base, self.sums, self.alive,
             jnp.asarray(idx), new_u8, new_base, new_sums)
+        self.cells_u8 = self._place2d(cells_u8)
+        self.base = self._place1d(base)
+        self.sums = self._place1d(sums)
+        self.alive = self._place1d(alive)
         ok_h = np.asarray(ok)
         self._base_host[idx] = np.asarray(new_base)
         self._alive_host[idx] = True
@@ -261,12 +309,24 @@ class ClockRegistry:
         that is ≼ the local clock is an ANCESTOR (its events are in the
         local past), a peer the local clock is ≼ is a DESCENDANT, and
         incomparable peers are FORKED (exact, §3).
+
+        Sharded mode runs the shard_map'd packed kernel over the row
+        shards (query replicated, no cross-device traffic).  Promoted
+        rows never drop the slab to the int32 fallback anymore: the
+        bulk stays packed and only the promoted handful is re-classified
+        wide, then patched in (``ops.overlay_wide_classify``).
         """
         q = local.logical_cells().astype(jnp.int32)
-        if self.packed:
-            out = ops.classify_vs_many_packed(q, self.cells_u8, self.base)
+        if self.mesh is not None:
+            out = ops.classify_vs_many_packed_sharded(
+                q, self.cells_u8, self.base, mesh=self.mesh, axis=self.axis)
         else:
-            out = ops.classify_vs_many(q, self._materialized())
+            out = ops.classify_vs_many_packed(q, self.cells_u8, self.base)
+        if self._wide:
+            widx = sorted(self._wide)
+            out = ops.overlay_wide_classify(
+                out, q, widx,
+                jnp.asarray(np.stack([self._wide[s] for s in widx])))
         h = jax.device_get(out)          # single host transfer for the dict
         alive = self._alive_host
         p_le_q = h["p_le_q"]
@@ -290,12 +350,18 @@ class ClockRegistry:
         )
 
     def all_pairs(self, **kw) -> dict:
-        """Tiled all-pairs compare over the ALIVE rows only.
+        """Tiled all-pairs compare; dead slots report all-False flags
+        and ``fp = row_sums = 0`` — no misleading verdicts from stale
+        cells.
 
-        Dead slots are masked out before the kernel (the alive rows are
-        gathered into a dense sub-slab, so dead slots cost no compute)
-        and report ``a_le_b = b_le_a = concurrent = False`` and
-        ``fp = row_sums = 0`` — no misleading verdicts from stale cells.
+        Unsharded, fully-packed fleets gather the alive rows into a
+        dense sub-slab (dead slots cost no compute) and sweep the
+        symmetric triangle engine.  Sharded fleets run the block-row
+        ``ppermute`` ring over the full capacity slab — even row shards
+        beat gather-compaction across devices — and mask dead slots
+        after.  Promoted rows no longer drop the whole slab to the
+        int32 fallback: the O(N^2) bulk stays packed and only the
+        promoted handful is compared wide (``_host_pairs``).
         """
         cap = self.capacity
         aidx = np.flatnonzero(self._alive_host)
@@ -307,31 +373,182 @@ class ClockRegistry:
                 "row_sums": jnp.zeros((cap,), jnp.float32),
                 "col_sums": jnp.zeros((cap,), jnp.float32),
             }
+        if self.mesh is not None:
+            bulk = ops.compare_matrix_packed_sharded(
+                self.cells_u8, self.base, mesh=self.mesh, axis=self.axis,
+                uniform_base=self._uniform_base(), **kw)
+            if aidx.size == cap and self.packed:
+                return bulk
+            if not self.packed:
+                # promoted rows: patch the O(P * A) int32 rim into the
+                # bulk ON DEVICE — the [cap, cap] matrices stay sharded
+                bulk = self._device_wide_overlay(bulk, aidx, **kw)
+            # dead slots report nothing; masking is device-side too, so
+            # a huge sharded fleet never materializes flags on host
+            return _mask_dead_pairs(bulk, self.alive)
         if aidx.size == cap and self.packed:
             return ops.compare_matrix_packed(
                 self.cells_u8, self.base,
                 uniform_base=self._uniform_base(), **kw)
-        jidx = jnp.asarray(aidx)
         if self.packed:
+            jidx = jnp.asarray(aidx)
             sub = ops.compare_matrix_packed(
                 jnp.take(self.cells_u8, jidx, axis=0),
                 jnp.take(self.base, jidx),
                 uniform_base=self._uniform_base(), **kw)
-        else:
-            rows = jnp.take(self._materialized(), jidx, axis=0)
-            sub = ops.compare_matrix(rows, rows, **kw)
-        return _expand_alive(sub, jidx, cap)
+            return _expand_alive(sub, jidx, cap)
+        return self._host_pairs(aidx, **kw)
+
+    def _alive_widx(self, aidx: np.ndarray) -> np.ndarray:
+        """Promoted slots restricted to the given alive index set."""
+        keep = set(int(s) for s in aidx)
+        return np.asarray(
+            sorted(s for s in self._wide if s in keep), np.int64)
+
+    def _wide_rim(self, aidx: np.ndarray, widx: np.ndarray, **kw) -> dict:
+        """Exact int32 compare of the promoted rows vs every alive row
+        ([P, A]).  Unpacks ONLY the gathered alive rows — never the
+        full-capacity slab — and patches the promoted rows' true values
+        over their clipped residuals.
+
+        Known scale limit (ROADMAP): the gathered [A, m] int32 operand
+        is placed by the gather, so on a mesh-sharded registry the rim
+        still concentrates ~4x the alive u8 bytes on one device; a
+        shard-wise rim (wide rows replicated vs each row shard under
+        shard_map) would remove that.  Promoted rows contradict the §4
+        moving-window premise, so fleets sharded for scale should treat
+        them as an eviction signal, not steady state."""
+        # interpret/block-shape overrides carry over; a packed-engine
+        # hint does not (it can't run on overflowed rows) — and since a
+        # promoted row's span exceeds a byte BY DEFINITION, name the
+        # int32 engine outright and skip the futile span probe
+        rim_kw = {kk: v for kk, v in kw.items()
+                  if kk in ("interpret", "bi", "bj", "bm")}
+        rim_kw["engine"] = "i32"
+        wide_rows = jnp.asarray(
+            np.stack([self._wide[int(s)] for s in widx]))
+        jaidx = jnp.asarray(aidx)
+        alive_i32 = pack.unpack_rows(
+            jnp.take(self.cells_u8, jaidx, axis=0),
+            jnp.take(self.base, jaidx))
+        wpos = {int(s): i for i, s in enumerate(aidx)}
+        alive_i32 = alive_i32.at[
+            jnp.asarray([wpos[int(s)] for s in widx])].set(wide_rows)
+        return ops.compare_matrix(wide_rows, alive_i32, **rim_kw)
+
+    def _device_wide_overlay(self, bulk: dict, aidx: np.ndarray,
+                             **kw) -> dict:
+        """Patch the promoted rows'/cols' flags into the sharded bulk and
+        re-finalize fp from corrected sums, entirely ON DEVICE — the
+        [cap, cap] matrices stay sharded, so even a promoted row on a
+        fleet too large for one device costs only the O(P * cap) rim."""
+        cap, m = self.capacity, self.m
+        widx = self._alive_widx(aidx)
+        if widx.size == 0:
+            return bulk
+        rim = self._wide_rim(aidx, widx, **kw)
+        jw = jnp.asarray(widx)
+        jaidx = jnp.asarray(aidx)
+        P = int(widx.size)
+
+        def patch(mat, row_pa, col_pa):
+            rows_full = jnp.zeros((P, cap), bool).at[:, jaidx].set(row_pa)
+            cols_full = jnp.zeros((P, cap), bool).at[:, jaidx].set(col_pa)
+            mat = jnp.asarray(mat, bool).at[jw, :].set(rows_full)
+            return mat.at[:, jw].set(cols_full.T)
+
+        le = patch(bulk["a_le_b"], rim["a_le_b"], rim["b_le_a"])
+        ge = patch(bulk["b_le_a"], rim["b_le_a"], rim["a_le_b"])
+        sums = jnp.asarray(bulk["row_sums"]).at[jw].set(rim["row_sums"])
+        return {
+            "a_le_b": le, "b_le_a": ge,
+            "concurrent": jnp.logical_not(jnp.logical_or(le, ge)),
+            # same jitted Eq. 3 expression as every engine finalize, over
+            # the corrected sums -> bit-identical to the unsharded path
+            "fp": ops.eq3_outer(sums, sums, m),
+            "row_sums": sums, "col_sums": sums,
+        }
+
+    def _host_pairs(self, aidx: np.ndarray, **kw) -> dict:
+        """Unsharded sparse promoted-row assembly: packed engines over
+        the still-packed alive rows plus the exact int32 rim for the
+        promoted handful, stitched on host (the slab already lives on
+        one device here — the sharded path patches on device instead,
+        see ``_device_wide_overlay``).  fp is re-finalized from the
+        corrected sums through the SAME jitted Eq. 3 expression the
+        engines use (``ops.eq3_outer``), so values stay bit-identical
+        to the single-device int32 fallback this replaces."""
+        cap, m = self.capacity, self.m
+        alive = self._alive_host
+        widx = self._alive_widx(aidx)
+        le = np.zeros((cap, cap), bool)
+        ge = np.zeros((cap, cap), bool)
+        sums = np.zeros(cap, np.float32)
+        pidx = np.asarray([s for s in aidx if s not in self._wide],
+                          np.int64)
+        if pidx.size:
+            b = self._base_host[pidx]
+            sub = jax.device_get(ops.compare_matrix_packed(
+                jnp.take(self.cells_u8, jnp.asarray(pidx), axis=0),
+                jnp.take(self.base, jnp.asarray(pidx)),
+                uniform_base=bool((b == b[0]).all()), **kw))
+            le[np.ix_(pidx, pidx)] = sub["a_le_b"]
+            ge[np.ix_(pidx, pidx)] = sub["b_le_a"]
+            sums[pidx] = sub["row_sums"]
+        if widx.size:
+            rim = jax.device_get(self._wide_rim(aidx, widx, **kw))
+            le[np.ix_(widx, aidx)] = rim["a_le_b"]
+            ge[np.ix_(widx, aidx)] = rim["b_le_a"]
+            le[np.ix_(aidx, widx)] = rim["b_le_a"].T
+            ge[np.ix_(aidx, widx)] = rim["a_le_b"].T
+            sums[widx] = rim["row_sums"]
+        le[~alive] = False
+        le[:, ~alive] = False
+        ge[~alive] = False
+        ge[:, ~alive] = False
+        sums[~alive] = 0.0
+        pair = np.ix_(aidx, aidx)
+        conc = np.zeros((cap, cap), bool)
+        conc[pair] = ~(le[pair] | ge[pair])
+        fp = np.zeros((cap, cap), np.float32)
+        fp[pair] = np.asarray(ops.eq3_outer(
+            jnp.asarray(sums[aidx]), jnp.asarray(sums[aidx]), m))
+        s = jnp.asarray(sums)
+        return {
+            "a_le_b": jnp.asarray(le), "b_le_a": jnp.asarray(ge),
+            "concurrent": jnp.asarray(conc), "fp": jnp.asarray(fp),
+            "row_sums": s, "col_sums": s,
+        }
 
     # ---- batched merge ----
     def union(self, mask: np.ndarray, local: bc.BloomClock) -> bc.BloomClock:
-        """Merge the local clock with every masked row (one device call)."""
+        """Merge the local clock with every masked row (one device call).
+
+        With promoted rows present, only the MASKED rows are gathered
+        and unpacked (plus the promoted handful patched in wide) — the
+        full slab is never materialized int32, so a sharded fleet's
+        gossip round stays within its per-device memory bound.
+        """
         local_cells = local.logical_cells().astype(jnp.int32)
-        mask = jnp.asarray(mask, bool)
+        mask_h = np.asarray(mask, bool)
+        midx = np.flatnonzero(mask_h)
+        if midx.size == 0:
+            return bc.BloomClock(
+                cells=local_cells, base=jnp.zeros((), jnp.int32), k=self.k)
         if self.packed:
-            merged = _union_rows_packed(self.cells_u8, self.base, mask,
-                                        local_cells)
+            merged = _union_rows_packed(
+                self.cells_u8, self.base, jnp.asarray(mask_h), local_cells)
         else:
-            merged = _union_rows_i32(self._materialized(), mask, local_cells)
+            jmid = jnp.asarray(midx)
+            rows = pack.unpack_rows(
+                jnp.take(self.cells_u8, jmid, axis=0),
+                jnp.take(self.base, jmid))
+            wsel = [(pos, int(s)) for pos, s in enumerate(midx)
+                    if int(s) in self._wide]
+            if wsel:
+                rows = rows.at[jnp.asarray([p for p, _ in wsel])].set(
+                    jnp.asarray(np.stack([self._wide[s] for _, s in wsel])))
+            merged = jnp.maximum(local_cells, jnp.max(rows, axis=0))
         return bc.BloomClock(
             cells=merged, base=jnp.zeros((), jnp.int32), k=self.k)
 
@@ -347,9 +564,12 @@ class ClockRegistry:
         row_u8, row_base, ok = pack.pack_rows(logical[None])
         row_sum = bc.clock_sum(clock)
         mask_d = jnp.asarray(mask, bool)
-        self.cells_u8, self.base, self.sums = _broadcast_rows(
+        cells_u8, base, sums = _broadcast_rows(
             self.cells_u8, self.base, self.sums, mask_d,
             row_u8[0], row_base[0], row_sum)
+        self.cells_u8 = self._place2d(cells_u8)
+        self.base = self._place1d(base)
+        self.sums = self._place1d(sums)
         midx = np.flatnonzero(np.asarray(mask))
         self._base_host[midx] = int(row_base[0])
         packed_ok = bool(ok[0])
@@ -362,6 +582,25 @@ class ClockRegistry:
                 self._wide[int(slot)] = row_np
         self._mat = None
         return packed_ok
+
+
+@jax.jit
+def _mask_dead_pairs(bulk: dict, alive: jax.Array) -> dict:
+    """Device-side dead-slot masking of a full-capacity all-pairs bulk:
+    the sharded ring's counterpart of ``_expand_alive`` (same contract —
+    dead rows/cols report all-False flags and zero fp / sums)."""
+    pair = alive[:, None] & alive[None, :]
+    le = jnp.asarray(bulk["a_le_b"], bool) & pair
+    ge = jnp.asarray(bulk["b_le_a"], bool) & pair
+    sums = jnp.where(alive, bulk["row_sums"], 0.0)
+    return {
+        "a_le_b": le,
+        "b_le_a": ge,
+        "concurrent": jnp.logical_not(jnp.logical_or(le, ge)) & pair,
+        "fp": jnp.where(pair, bulk["fp"], 0.0),
+        "row_sums": sums,
+        "col_sums": sums,
+    }
 
 
 def _expand_alive(sub: dict, jidx: jax.Array, cap: int) -> dict:

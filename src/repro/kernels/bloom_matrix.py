@@ -66,6 +66,15 @@ folded in as a clipped [bi, bj] delta (clipping at ±(U8_MAX + 1) cannot
 change a verdict since residual differences are bounded by U8_MAX) or as
 a per-row shift before encoding.  Padded lanes are masked in-kernel
 where bases make zero-padding non-neutral.
+
+These kernels are also the per-shard building blocks of the mesh-sharded
+registry paths (``ops.classify_vs_many_packed_sharded`` /
+``ops.compare_matrix_packed_sharded``): shard_map runs the one-vs-many
+kernel on each [N/d, m] row shard, and the all-pairs ring feeds each
+visiting column shard through ``bloom_matrix_packed_pallas`` one
+[N/d, N/d] tile at a time.  Nothing in the kernel bodies is
+placement-aware — flags are exact, so sharded results stay bit-identical
+to the single-device sweeps.
 """
 from __future__ import annotations
 

@@ -24,6 +24,8 @@ import math
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.hashing import bloom_indices
 from repro.kernels import autotune
@@ -44,11 +46,15 @@ __all__ = [
     "merge_compare",
     "classify_vs_many",
     "classify_vs_many_packed",
+    "classify_vs_many_packed_sharded",
+    "overlay_wide_classify",
     "compare_matrix",
     "compare_matrix_packed",
+    "compare_matrix_packed_sharded",
     "pad_to",
     "pick_block",
     "tile2d",
+    "eq3_outer",
     "MXU_SPAN_MAX",
 ]
 
@@ -219,6 +225,30 @@ def _classify_dict(flags, sums, fp, N):
     }
 
 
+def _one_vs_many_blocks(N: int, m: int, bn, bm, interpret: bool):
+    """Resolve one-vs-many block defaults: explicit args > autotune >
+    per-backend defaults.  The sharded wrapper resolves at FULL-N too,
+    so both paths always tile the m axis identically."""
+    if bn is None or bm is None:
+        cfg = autotune.lookup("one_vs_many", N, N, m, interpret) or {}
+        bn = bn or cfg.get("bn", 8 if not interpret else 128)
+        bm = bm or cfg.get("bm", 512)
+    return bn, bm
+
+
+def _one_vs_many_body(q, peers, base, bn, bm, m: int, interpret: bool):
+    """Pad one packed slab (or one row shard of it) and run the kernel;
+    shared by the unsharded and shard_map'ed classify paths."""
+    nd = peers.shape[0]
+    peers_p, bn_eff, bm_eff = tile2d(peers, bn, bm)
+    q_p = pad_to(q[None, :], peers_p.shape[1], axis=1)
+    base_p = _pad_base(base, peers_p.shape[0])
+    flags, sums, fp = bloom_one_vs_many_packed_pallas(
+        q_p, peers_p, base_p, bn=bn_eff, bm=bm_eff, m_true=m,
+        interpret=interpret)
+    return flags[:nd], sums[:nd], fp[:nd]
+
+
 def classify_vs_many_packed(
     q: jax.Array,            # [m] int32 local (query) logical cells
     peers: jax.Array,        # [N, m] uint8 residual slab
@@ -236,17 +266,81 @@ def classify_vs_many_packed(
     (m,) = q.shape
     N, mp_ = peers.shape
     assert m == mp_, (q.shape, peers.shape)
-    if bn is None or bm is None:
-        cfg = autotune.lookup("one_vs_many", N, N, m, interpret) or {}
-        bn = bn or cfg.get("bn", 8 if not interpret else 128)
-        bm = bm or cfg.get("bm", 512)
-    peers_p, bn_eff, bm_eff = tile2d(peers, bn, bm)
-    q_p = pad_to(q[None, :], peers_p.shape[1], axis=1)
-    base_p = _pad_base(base, peers_p.shape[0])
-    flags, sums, fp = bloom_one_vs_many_packed_pallas(
-        q_p, peers_p, base_p, bn=bn_eff, bm=bm_eff, m_true=m,
-        interpret=interpret)
+    bn, bm = _one_vs_many_blocks(N, m, bn, bm, interpret)
+    flags, sums, fp = _one_vs_many_body(q, peers, base, bn, bm, m, interpret)
     return _classify_dict(flags, sums, fp, N)
+
+
+def classify_vs_many_packed_sharded(
+    q: jax.Array,            # [m] int32 local (query) logical cells
+    peers: jax.Array,        # [N, m] uint8 residual slab, row-sharded
+    base: jax.Array,         # [N] (or [N, 1]) int32 per-slot offsets
+    *,
+    mesh,                    # jax.sharding.Mesh carrying ``axis``
+    axis: str,               # mesh axis the slab rows are sharded over
+    bn: int | None = None,
+    bm: int | None = None,
+    interpret: bool | None = None,
+):
+    """``classify_vs_many_packed`` over a row-sharded slab via shard_map.
+
+    The query is replicated; every device runs the packed one-vs-many
+    Pallas kernel on its own ``[N/d, m]`` row shard — no cross-device
+    traffic at all (the reduction is per-row).  Block shapes are
+    resolved ONCE at full-N granularity so every shard count tiles the
+    m axis identically: the f32 sum accumulation order (and therefore
+    the Eq. 3 fp bits) is bit-identical across shard counts and vs the
+    unsharded engine.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    (m,) = q.shape
+    N, mp_ = peers.shape
+    assert m == mp_, (q.shape, peers.shape)
+    shards = mesh.shape[axis]
+    if N % shards:
+        raise ValueError(f"slab rows {N} not divisible by {shards} shards")
+    bn, bm = _one_vs_many_blocks(N, m, bn, bm, interpret)
+    fn = _sharded_classify_fn(mesh, axis, bn, bm, m, interpret)
+    flags, sums, fp = fn(q, peers, jnp.asarray(base, jnp.int32).reshape(-1))
+    return _classify_dict(flags, sums, fp, N)
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_classify_fn(mesh, axis: str, bn: int, bm: int, m: int,
+                         interpret: bool):
+    """Jitted shard_map'd one-vs-many classify, cached per (mesh, axis,
+    blocks) so repeated gossip rounds reuse the compiled executable
+    instead of re-wrapping and re-tracing the kernel every call."""
+    def shard_body(qv, cu8, b):
+        return _one_vs_many_body(qv, cu8, b, bn, bm, m, interpret)
+
+    return jax.jit(shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(P(), P(axis, None), P(axis)),
+        out_specs=(P(axis, None),) * 3,
+        check_rep=False,     # no replication rule for pallas_call
+    ))
+
+
+def overlay_wide_classify(out: dict, q: jax.Array, wide_idx,
+                          wide_rows: jax.Array, *,
+                          interpret: bool | None = None) -> dict:
+    """Sparse promoted-row overlay for one-vs-many classify results.
+
+    ``out`` is a packed-slab result dict whose promoted slots hold
+    garbage (their u8 residuals were clipped at promotion); re-classify
+    JUST the ``[P, m]`` promoted rows through the exact int32 kernel and
+    patch them in.  The O(N) bulk stays packed — a single overflowed row
+    no longer drops the whole slab compare to the int32 fallback.
+    """
+    wout = classify_vs_many(q, wide_rows, interpret=interpret)
+    idx = jnp.asarray(wide_idx, jnp.int32)
+    patched = dict(out)
+    for key in ("q_le_p", "p_le_q", "sum_p",
+                "fp_q_before_p", "fp_p_before_q"):
+        patched[key] = jnp.asarray(out[key]).at[idx].set(wout[key])
+    return patched
 
 
 # ---------------------------------------------------------------------------
@@ -263,6 +357,12 @@ def _eq3_outer(row_sums, col_sums, m_true: int):
     log_q = jnp.log1p(-1.0 / m_true)
     inner = jnp.clip(-jnp.expm1(col_sums[None, :] * log_q), _EQ3_CLIP, 1.0)
     return jnp.exp(row_sums[:, None] * jnp.log(inner))
+
+
+# public alias: the registry's sparse promoted-row assembly re-finalizes
+# fp from corrected sums through the SAME jitted expression, keeping its
+# values bit-identical to the in-engine finalize
+eq3_outer = _eq3_outer
 
 
 @functools.partial(jax.jit, static_argnames=("m_true",))
@@ -338,6 +438,12 @@ def compare_matrix_packed(
         cols, col_base = cells, base
     N, m = cells.shape
     M = cols.shape[0]
+    if engine == "i32":
+        # the legacy hint selects the int32 kernel in compare_matrix;
+        # a packed slab has no int32 kernel, so resolve to auto (flags
+        # are exact under every packed engine) instead of raising —
+        # registry.all_pairs(**kw) call sites keep working packed
+        engine = None
     if engine is None:
         cfg = autotune.lookup("matrix", N, M, m, interpret) or {}
         engine = cfg.get("engine", "tri")
@@ -365,15 +471,9 @@ def compare_matrix_packed(
         return _tri_combine(le, ge, row_sums, N, M, m, bi_eff)
 
     if engine == "full":
-        rows_p, bi_eff, bm_eff = tile2d(cells, bi, bm)
-        cols_p, bj_eff, _ = tile2d(cols, bj, bm_eff)
-        cols_p = pad_to(cols_p, rows_p.shape[1], axis=1)
-        le, ge = bloom_matrix_packed_pallas(
-            rows_p, cols_p, _pad_base(base, rows_p.shape[0]),
-            _pad_base(col_base, cols_p.shape[0]),
-            bi=bi_eff, bj=bj_eff, bm=bm_eff, m_true=m,
-            with_base=not uniform_base, interpret=interpret)
-        return _matrix_dict(le[:N, :M].astype(bool), ge[:N, :M].astype(bool),
+        le, ge = _full_rect_flags(cells, base, cols, col_base, bi, bj, bm,
+                                  m, not uniform_base, interpret)
+        return _matrix_dict(le.astype(bool), ge.astype(bool),
                             row_sums, col_sums, m)
 
     if engine == "mxu":
@@ -391,6 +491,126 @@ def compare_matrix_packed(
                              row_sums, col_sums, N, M, m, lo)
 
     raise ValueError(f"unknown packed engine: {engine}")
+
+
+def _full_rect_flags(rows, row_base, cols, col_base, bi, bj, bm,
+                     m: int, with_base: bool, interpret: bool):
+    """Pad-and-call for the packed full-rect engine, shared by the
+    unsharded "full" branch and every sharded ring step (duplicate pads
+    CSE away under jit).  Returns (le, ge) cropped to the true [N, M]."""
+    N, M = rows.shape[0], cols.shape[0]
+    rows_p, bi_eff, bm_eff = tile2d(rows, bi, bm)
+    cols_p, bj_eff, _ = tile2d(cols, bj, bm_eff)
+    cols_p = pad_to(cols_p, rows_p.shape[1], axis=1)
+    le, ge = bloom_matrix_packed_pallas(
+        rows_p, cols_p, _pad_base(row_base, rows_p.shape[0]),
+        _pad_base(col_base, cols_p.shape[0]),
+        bi=bi_eff, bj=bj_eff, bm=bm_eff, m_true=m,
+        with_base=with_base, interpret=interpret)
+    return le[:N, :M], ge[:N, :M]
+
+
+def compare_matrix_packed_sharded(
+    cells: jax.Array,           # [N, m] uint8 residual slab, row-sharded
+    base: jax.Array,            # [N] (or [N, 1]) int32 per-slot offsets
+    *,
+    mesh,                       # jax.sharding.Mesh carrying ``axis``
+    axis: str,                  # mesh axis the slab rows are sharded over
+    engine: str | None = None,  # engine HINT; the ring resolves to "full"
+    bi: int | None = None,
+    bj: int | None = None,
+    bm: int | None = None,
+    uniform_base: bool | None = None,
+    interpret: bool | None = None,
+):
+    """Symmetric all-pairs over a row-sharded packed slab: block-row ring.
+
+    Each of the ``d`` devices holds a ``[N/d, m]`` row shard and
+    circulates a column shard around the mesh ring with ``ppermute``;
+    every ring step compares its resident rows against the visiting
+    columns with the packed full-rect engine, filling one ``[N/d, N/d]``
+    block of its ``[N/d, N]`` block-row.  After ``d`` steps the
+    shard_map output concatenates to the full ``[N, N]`` flag matrices.
+
+    Per-device HBM traffic is O(N * m / d) resident + O(N * m) streamed
+    ring tiles; peak per-device memory never materializes the whole
+    slab.  Flags are exact, and the fp / sums finalize runs through the
+    SAME ``_eq3_outer`` / ``_packed_row_sums`` expressions as the
+    unsharded engines over exact integer sums — results are
+    bit-identical for every shard count.
+
+    The ring sweeps every (i, j) block even though ``ge(i, j) ==
+    le(j, i)`` — a deliberate 2x compute trade for d simple identical
+    steps; halving it (ceil(d/2) steps + shipping transposed blocks
+    back) is the ROADMAP "ring on real interconnect" item.
+
+    Pass ``uniform_base`` explicitly on hot paths (the registry does,
+    from its host-side base copy): the default probes the sharded base
+    vector, which costs a cross-device reduction plus a blocking host
+    sync per call.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    # every engine name valid elsewhere is accepted so sharding a
+    # registry never breaks existing all_pairs(**kw) call sites: "tri"
+    # has no per-tile meaning on the ring (tiles are rectangles), "mxu"
+    # would need a host-synced global span probe, and "i32" is the
+    # legacy-kernel hint from compare_matrix — all resolve to the
+    # full-rect packed engine, whose flags are exact regardless
+    if engine not in (None, "full", "tri", "mxu", "i32"):
+        raise ValueError(f"unknown packed engine: {engine}")
+    N, m = cells.shape
+    d = mesh.shape[axis]
+    if N % d:
+        raise ValueError(f"slab rows {N} not divisible by {d} shards")
+    base = jnp.asarray(base, jnp.int32).reshape(-1)
+    if uniform_base is None:
+        b = base
+        uniform_base = bool((b == b[0]).all())
+    with_base = not uniform_base
+    bi, bj, bm = _matrix_blocks("full", N // d, N // d, m, bi, bj, bm,
+                                interpret)
+    fn = _sharded_ring_fn(mesh, axis, N, bi, bj, bm, m, with_base, interpret)
+    le, ge = fn(cells, base)
+    row_sums = _packed_row_sums(cells, base, m)
+    return _matrix_dict(le.astype(bool), ge.astype(bool),
+                        row_sums, row_sums, m)
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_ring_fn(mesh, axis: str, N: int, bi: int, bj: int, bm: int,
+                     m: int, with_base: bool, interpret: bool):
+    """Jitted shard_map'd block-row ring, cached per (mesh, axis, shape,
+    blocks) so the d-step unrolled ppermute body traces once, not on
+    every all_pairs call."""
+    d = mesh.shape[axis]
+
+    def ring(cu8, b):
+        nd = cu8.shape[0]
+        my = jax.lax.axis_index(axis)
+        le_acc = jnp.zeros((nd, N), jnp.int8)
+        ge_acc = jnp.zeros((nd, N), jnp.int8)
+        cols, cb = cu8, b
+        for s in range(d):
+            src = (my + s) % d          # column block visiting this step
+            le, ge = _full_rect_flags(cu8, b, cols, cb, bi, bj, bm,
+                                      m, with_base, interpret)
+            le_acc = jax.lax.dynamic_update_slice(
+                le_acc, le, (0, src * nd))
+            ge_acc = jax.lax.dynamic_update_slice(
+                ge_acc, ge, (0, src * nd))
+            if s < d - 1:
+                perm = [(i, (i - 1) % d) for i in range(d)]
+                cols = jax.lax.ppermute(cols, axis, perm)
+                cb = jax.lax.ppermute(cb, axis, perm)
+        return le_acc, ge_acc
+
+    return jax.jit(shard_map(
+        ring, mesh=mesh,
+        in_specs=(P(axis, None), P(axis)),
+        out_specs=(P(axis, None),) * 2,
+        check_rep=False,     # no replication rule for pallas_call
+    ))
 
 
 def _logical_bounds(cells, base, cols, col_base):

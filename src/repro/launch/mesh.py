@@ -8,8 +8,13 @@ the single real CPU device.
 from __future__ import annotations
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
-__all__ = ["make_production_mesh", "make_local_mesh", "mesh_axes"]
+from repro.sharding import FLEET_AXIS
+
+__all__ = ["make_production_mesh", "make_local_mesh", "make_fleet_mesh",
+           "mesh_axes"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,6 +29,24 @@ def make_local_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = max(1, min(model, n // data))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_fleet_mesh(shards: int | None = None, axis: str = FLEET_AXIS) -> Mesh:
+    """1-D mesh for registry slab sharding (``ClockRegistry(mesh=...)``).
+
+    Takes the FIRST ``shards`` local devices (default: all of them), so
+    shard counts below the device count work — the multi-device test
+    harness sweeps {1, 2, 4, 8} on one 8-device host platform.  For
+    local testing without accelerators, force host devices BEFORE jax
+    initializes:  XLA_FLAGS=--xla_force_host_platform_device_count=8
+    (tests/conftest.py does this for the whole suite).
+    """
+    devs = jax.devices()
+    shards = len(devs) if shards is None else shards
+    if shards < 1 or shards > len(devs):
+        raise ValueError(
+            f"need 1 <= shards <= {len(devs)} local devices, got {shards}")
+    return Mesh(np.asarray(devs[:shards]), (axis,))
 
 
 def mesh_axes(mesh) -> tuple:

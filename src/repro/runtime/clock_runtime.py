@@ -137,6 +137,19 @@ class ClockRuntime:
         clock in one device call (see registry.classify_all)."""
         return registry.classify_all(self.clock)
 
+    def make_registry(self, capacity: int, *, mesh=None, axis: str | None = None):
+        """Fleet registry sized to this runtime's clock config.
+
+        Pass a mesh (``launch.mesh.make_fleet_mesh``) to shard the peer
+        slab over devices — classify_fleet then runs the shard_map'ed
+        kernels transparently, with results bit-identical to the
+        single-device slab.
+        """
+        from repro.fleet.registry import ClockRegistry
+        from repro.sharding import FLEET_AXIS
+        return ClockRegistry(capacity, m=self.cfg.m, k=self.cfg.k,
+                             mesh=mesh, axis=FLEET_AXIS if axis is None else axis)
+
     def refined_fp(self, other: bc.BloomClock) -> float:
         """§3 history refinement: fp against the closest dominating stored
         timestamp instead of the newest."""

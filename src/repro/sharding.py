@@ -23,13 +23,27 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
     "DEFAULT_RULES",
+    "FLEET_AXIS",
     "make_rules",
     "logical_to_pspec",
     "param_pspecs",
     "shard",
+    "slab_shardings",
     "use_mesh_rules",
     "current_mesh",
 ]
+
+# mesh axis name the fleet registry shards its peer slab over; kept out
+# of DEFAULT_RULES because the slab is placed explicitly (NamedSharding
+# on the arrays + shard_map'ed kernels), not via logical-axis constraint
+FLEET_AXIS = "fleet"
+
+
+def slab_shardings(mesh: "Mesh", axis: str = FLEET_AXIS):
+    """(rows, vec) NamedShardings for a registry slab: the ``[N, m]``
+    cell slab row-sharded over ``axis`` and its ``[N]`` per-slot
+    vectors (base / sums / alive) sharded to match."""
+    return (NamedSharding(mesh, P(axis, None)), NamedSharding(mesh, P(axis)))
 
 # logical axis -> mesh axis (str), tuple of axes, or None (replicate).
 # "*_v" names are small vectors (biases/scales): always replicated.

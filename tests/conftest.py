@@ -1,11 +1,36 @@
+import os
+
+# The sharded-fleet harness (tests/test_sharded_fleet.py) shard_maps the
+# registry kernels over a mesh, which needs multiple devices — and on
+# the CPU host platform they must be forced BEFORE jax initializes its
+# backend, so this happens at conftest import, not in a fixture body.
+# 8 forced host devices are harmless for the single-device tests
+# (unsharded work runs on device 0); the dry-run sets its own XLA_FLAGS
+# in its own process and never inherits these.
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
 import jax
 import pytest
 
-# smoke tests / benches must see ONE device (the dry-run sets its own
-# XLA_FLAGS in-process before importing jax — never here).
+# smoke tests / benches must see the CPU platform regardless of build.
 jax.config.update("jax_platforms", "cpu")
 
 
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def host_devices():
+    """The forced 8-device host platform the shard_map tests run on."""
+    devs = jax.devices()
+    if len(devs) < 8:
+        pytest.skip(
+            f"needs 8 forced host devices, have {len(devs)} "
+            "(jax initialized before conftest set XLA_FLAGS?)")
+    return devs

@@ -254,3 +254,18 @@ def test_gossip_sim_small_m_stays_in_band():
         SimConfig(n_nodes=8, n_events=400, m=16, k=2, seed=5), n_rounds=8)
     assert r.false_negatives == 0
     assert r.within_eq3_band
+
+
+def test_evict_many_unknown_peer_is_atomic():
+    """An unknown peer_id in the batch leaves the registry untouched —
+    no half-evicted peers stuck alive outside the free list."""
+    reg = ClockRegistry(capacity=4, m=64, k=3)
+    reg.admit_many({"a": _clock_from(_cells(1, 64)[0]),
+                    "b": _clock_from(_cells(1, 64)[0])})
+    with pytest.raises(KeyError):
+        reg.evict_many(["a", "nope"])
+    assert "a" in reg and "b" in reg
+    assert np.asarray(reg.alive).sum() == 2
+    reg.evict_many(["a", "a", "b"])        # duplicates collapse cleanly
+    assert len(reg) == 0 and not np.asarray(reg.alive).any()
+    assert sorted(reg._free) == list(range(4))   # no leaked slots

@@ -295,3 +295,123 @@ def test_autotune_measured_sweep_small():
     best = autotune.autotune_matrix(16, 128, span=10, interpret=True)
     assert best["engine"] in ("tri", "i32", "mxu")
     assert best["us"] > 0
+
+# ---------------------------------------------------------------------------
+# sparse promoted-row dispatch (one wide row must NOT sink the slab)
+# ---------------------------------------------------------------------------
+
+def _one_wide_registry(cap=8, m=128, k=3):
+    reg = ClockRegistry(capacity=cap, m=m, k=k)
+    rows = {f"p{i}": _ticked(bc.zeros(m, k), range(3 * i, 3 * i + 6))
+            for i in range(cap - 1)}
+    wide = bc.BloomClock(
+        jnp.zeros((m,), jnp.int32).at[2].set(4000),
+        jnp.zeros((), jnp.int32), k)
+    rows["wide"] = wide
+    reg.admit_many(rows)
+    assert not reg.packed
+    return reg
+
+
+def test_sparse_promoted_classify_dispatch(monkeypatch):
+    """Regression pin: with ONE promoted row, classify_all keeps the
+    O(N) bulk on the packed kernel and runs the int32 kernel on just the
+    [1, m] promoted handful — never on the whole materialized slab."""
+    reg = _one_wide_registry()
+    calls = {"packed": [], "i32": []}
+    orig_packed = ops.classify_vs_many_packed
+    orig_i32 = ops.classify_vs_many
+    monkeypatch.setattr(
+        ops, "classify_vs_many_packed",
+        lambda q, p, b, **kw: calls["packed"].append(p.shape)
+        or orig_packed(q, p, b, **kw))
+    monkeypatch.setattr(
+        ops, "classify_vs_many",
+        lambda q, p, **kw: calls["i32"].append(p.shape)
+        or orig_i32(q, p, **kw))
+    local = reg.get("p0")
+    view = reg.classify_all(local)
+    assert calls["packed"] == [(8, 128)]       # bulk stayed packed
+    assert calls["i32"] == [(1, 128)]          # only the promoted handful
+    # verdicts stay exact through the overlay
+    assert view.status[reg.slot_of("p0")] == SAME
+    assert view.status[reg.slot_of("wide")] != DEAD
+    assert float(view.sums[reg.slot_of("wide")]) == 4000.0
+
+
+def test_sparse_promoted_all_pairs_dispatch(monkeypatch):
+    """Regression pin: all_pairs with one promoted row sweeps the packed
+    engine over the packed rows and the int32 rim over [1, m] x alive."""
+    reg = _one_wide_registry()
+    calls = {"packed": [], "i32": []}
+    orig_packed = ops.compare_matrix_packed
+    orig_i32 = ops.compare_matrix
+    monkeypatch.setattr(
+        ops, "compare_matrix_packed",
+        lambda c, b, *a, **kw: calls["packed"].append(c.shape)
+        or orig_packed(c, b, *a, **kw))
+    monkeypatch.setattr(
+        ops, "compare_matrix",
+        lambda r, c, **kw: calls["i32"].append((r.shape, c.shape))
+        or orig_i32(r, c, **kw))
+    mats = {kk: np.asarray(v) for kk, v in reg.all_pairs().items()}
+    assert calls["packed"] == [(7, 128)]               # bulk: packed rows only
+    assert calls["i32"] == [((1, 128), (8, 128))]      # rim: wide vs alive
+    # exactness vs a host reference over the logical cells
+    logical = np.asarray(reg.cells)
+    le_ref = np.all(logical[:, None, :] <= logical[None, :, :], axis=2)
+    np.testing.assert_array_equal(mats["a_le_b"], le_ref)
+    np.testing.assert_array_equal(mats["b_le_a"], le_ref.T)
+    np.testing.assert_array_equal(mats["concurrent"], ~(le_ref | le_ref.T))
+    np.testing.assert_array_equal(mats["row_sums"], logical.sum(1))
+
+
+def test_sparse_promoted_all_pairs_masks_dead(monkeypatch):
+    """Dead slots stay silent on the sparse promoted path too."""
+    reg = _one_wide_registry()
+    dead = reg.slot_of("p3")
+    reg.evict("p3")
+    mats = {kk: np.asarray(v) for kk, v in reg.all_pairs().items()}
+    for key in ("a_le_b", "b_le_a", "concurrent"):
+        assert not mats[key][dead].any() and not mats[key][:, dead].any()
+    assert mats["fp"][dead].max() == 0.0 and mats["row_sums"][dead] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# autotune fallback: table miss and corrupted cache file
+# ---------------------------------------------------------------------------
+
+def test_autotune_table_miss_falls_back(tmp_path, monkeypatch):
+    """No row for this backend/shape bucket: lookup reports the miss and
+    compare_matrix falls back to the built-in defaults deterministically."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(tmp_path / "missing.json"))
+    assert autotune.load_table() == {}
+    assert autotune.lookup("matrix", 16, 16, 128, True) is None
+    c = _cells(16, 128, hi=9)
+    got1 = ops.compare_matrix(c, c)
+    got2 = ops.compare_matrix(c, c)
+    ref = bc.comparability_matrix(
+        bc.BloomClock(c, jnp.zeros((16,), jnp.int32), 3))
+    np.testing.assert_array_equal(np.asarray(got1["a_le_b"]),
+                                  np.asarray(ref["a_le_b"]))
+    np.testing.assert_array_equal(np.asarray(got1["a_le_b"]),
+                                  np.asarray(got2["a_le_b"]))
+    assert (np.asarray(got1["fp"]) == np.asarray(got2["fp"])).all()
+
+
+def test_autotune_corrupted_cache_file(tmp_path, monkeypatch):
+    """A truncated/garbage cache file must read as an empty table (miss
+    everywhere), not crash the compare path."""
+    path = tmp_path / "corrupt.json"
+    path.write_text('{"matrix|interpret|N16|M16|m128": {"engine": "tr')
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(path))
+    assert autotune.load_table() == {}
+    assert autotune.lookup("matrix", 16, 16, 128, True) is None
+    c = _cells(12, 128, hi=9)
+    got = ops.compare_matrix(c, c)
+    ref = bc.comparability_matrix(
+        bc.BloomClock(c, jnp.zeros((12,), jnp.int32), 3))
+    np.testing.assert_array_equal(np.asarray(got["a_le_b"]),
+                                  np.asarray(ref["a_le_b"]))
+    np.testing.assert_allclose(np.asarray(got["fp"]), np.asarray(ref["fp"]),
+                               atol=1e-6)

@@ -113,8 +113,9 @@ print("AGREE")
 def test_moe_alltoall_agrees_with_gather_subprocess():
     """The shard_map all_to_all MoE == pjit gather MoE (no capacity drops).
 
-    Runs in a subprocess because it needs 4 forced host devices (the test
-    session pins 1 device for everything else)."""
+    Runs in a subprocess because it needs its OWN forced host device
+    count (the suite-wide conftest forces 8; this script pins 4 via its
+    own XLA_FLAGS before jax initializes in the child process)."""
     r = subprocess.run([sys.executable, "-c", _MOE_AGREE],
                        capture_output=True, text=True, cwd=os.path.dirname(
                            os.path.dirname(os.path.abspath(__file__))))
