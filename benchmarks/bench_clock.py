@@ -81,7 +81,7 @@ def bench_op_throughput() -> list:
 
     a = jnp.ones((B, m), jnp.int32)
     b = jnp.ones((B, m), jnp.int32)
-    cmp_core = jax.jit(lambda x, y: bc.compare(
+    cmp_core = jax.jit(lambda x, y: bc.ordering(
         bc.BloomClock(x, jnp.zeros((B,), jnp.int32), k),
         bc.BloomClock(y, jnp.zeros((B,), jnp.int32), k)).a_le_b)
     us = _timeit(cmp_core, a, b)
@@ -121,7 +121,7 @@ def bench_history_refinement() -> list:
         h = hist.push(h, c)
         if i == 10:
             old = c
-    fp_newest = float(bc.compare(old, c).fp_a_before_b)
+    fp_newest = float(bc.ordering(old, c).fp_a_before_b)
     fp_best, _ = hist.best_predecessor_fp(h, old)
     us = _timeit(lambda: hist.best_predecessor_fp(h, old))
     rows.append((f"history_refine_W{W}_m{m}", us,

@@ -3,8 +3,13 @@
 Every claim is recorded twice: as a (name, us_per_call, derived) CSV row
 on stdout (like bench_clock) and as a machine-readable record in
 ``BENCH_fleet.json`` — ``{op, shape, ms, speedup_vs_reference,
-reference}`` — so the perf trajectory is tracked across PRs and CI can
-smoke-run the whole file in interpret mode.
+reference, policy, engine}`` — so the perf trajectory is tracked across
+PRs and CI can smoke-run the whole file in interpret mode.  The
+``policy`` and ``engine`` columns name the ``CausalPolicy`` the call
+ran under and the engine/block shape the ``CausalEngine`` dispatch
+ACTUALLY chose (from the dispatch metadata), so a speedup claim is
+attributable to a concrete kernel configuration, not "whatever auto
+picked that day".
 
 - **all-pairs**: the packed u8 triangle kernel (the registry's engine)
   vs (a) the int32 Pallas kernel it replaced and (b)
@@ -31,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.causal import CausalEngine, CausalPolicy, PackedSlab
 from repro.core import clock as bc
 from repro.fleet import ClockRegistry, GossipConfig, fleet_health, gossip_round
 from repro.kernels import ops, pack
@@ -49,9 +55,34 @@ def _time(fn, n: int = 3) -> float:
     return (time.perf_counter() - t0) / n
 
 
+def _engine_of(res) -> str | None:
+    """Engine + block shapes from a typed result's dispatch metadata,
+    e.g. "tri bi8 bj8 bm512" — always names the BULK engine."""
+    if getattr(res, "engine", None) is None:
+        return None
+    blocks = " ".join(f"{k}{v}" for k, v in (res.blocks or ()))
+    return f"{res.engine} {blocks}".strip()
+
+
+def _last_engine() -> str | None:
+    """Like ``_engine_of`` but from the most recent ops dispatch
+    (``ops.LAST_DISPATCH``) — for paths whose host-side summaries
+    (FleetView / FleetHealth) carry no metadata.  Only accurate when
+    the timed call's LAST dispatch IS its bulk engine, which holds for
+    the fully-packed registries these benches build (a promoted row
+    would make the int32 rim the last dispatch)."""
+    d = ops.LAST_DISPATCH
+    if not d:
+        return None
+    blocks = " ".join(f"{k}{v}" for k, v in sorted(d.items())
+                      if k not in ("op", "engine"))
+    return f"{d['engine']} {blocks}".strip()
+
+
 def _rec(records: list, op: str, shape: str, seconds: float,
          reference: str | None = None, speedup: float | None = None,
-         shards: int = 1) -> None:
+         shards: int = 1, policy: str | None = None,
+         engine: str | None = None) -> None:
     records.append({
         "op": op,
         "shape": shape,
@@ -59,12 +90,15 @@ def _rec(records: list, op: str, shape: str, seconds: float,
         "ms": round(seconds * 1e3, 4),
         "speedup_vs_reference": round(speedup, 3) if speedup else None,
         "reference": reference,
+        "policy": policy,
+        "engine": engine,
     })
 
 
 def bench_all_pairs(n: int = 1024, m: int = 1024, verify: bool = True,
                     records: list | None = None) -> list:
-    """Packed triangle kernel vs int32 kernel vs broadcast reference."""
+    """Packed triangle kernel vs int32 kernel vs broadcast reference,
+    both driven through the CausalEngine front-door."""
     records = records if records is not None else []
     rows = []
     shape = f"n{n}_m{m}"
@@ -72,16 +106,23 @@ def bench_all_pairs(n: int = 1024, m: int = 1024, verify: bool = True,
     cells_u8, base, ok = pack.pack_rows(cells)
     assert bool(ok.all())
     clocks = bc.BloomClock(cells, jnp.zeros((n,), jnp.int32), 4)
+    auto_pol = CausalPolicy()
+    i32_pol = CausalPolicy(engine="i32", pack=False)
+    eng_auto = CausalEngine(auto_pol)
+    eng_i32 = CausalEngine(i32_pol)
+    slab = PackedSlab(cells_u8, base)
 
     # time the kernels BEFORE touching the broadcast reference: its
     # O(n^2 * m) intermediates (~4 GB at the acceptance config) degrade
     # allocator/cache behavior for everything measured after them
-    t_packed = _time(lambda: ops.compare_matrix_packed(cells_u8, base))
-    t_i32 = _time(lambda: ops.compare_matrix(cells, cells, engine="i32"))
+    t_packed = _time(lambda: eng_auto.pairs(slab))
+    packed_eng = _engine_of(eng_auto.pairs(slab))   # what auto chose
+    t_i32 = _time(lambda: eng_i32.pairs(cells))
+    i32_eng = _engine_of(eng_i32.pairs(cells))
 
     if verify:
-        got = jax.device_get(ops.compare_matrix_packed(cells_u8, base))
-        i32 = jax.device_get(ops.compare_matrix(cells, cells, engine="i32"))
+        got = jax.device_get(eng_auto.pairs(slab))
+        i32 = jax.device_get(eng_i32.pairs(cells))
         ref = jax.device_get(bc.comparability_matrix(clocks))
         flags_exact = bool(
             np.array_equal(got["a_le_b"], ref["a_le_b"])
@@ -95,9 +136,9 @@ def bench_all_pairs(n: int = 1024, m: int = 1024, verify: bool = True,
 
     t_ref = _time(lambda: bc.comparability_matrix(clocks), n=1)
     rows.append((f"matrix_packed_u8_{shape}", t_packed * 1e6,
-                 f"{n * n / t_packed / 1e6:.1f} Mpairs/s"))
+                 f"{n * n / t_packed / 1e6:.1f} Mpairs/s [{packed_eng}]"))
     rows.append((f"matrix_kernel_i32_{shape}", t_i32 * 1e6,
-                 f"{n * n / t_i32 / 1e6:.1f} Mpairs/s"))
+                 f"{n * n / t_i32 / 1e6:.1f} Mpairs/s [{i32_eng}]"))
     rows.append((f"broadcast_reference_{shape}", t_ref * 1e6,
                  f"{n * n / t_ref / 1e6:.1f} Mpairs/s"))
     bar = " (need >=2x)" if (n, m) == (1024, 1024) else ""
@@ -105,10 +146,13 @@ def bench_all_pairs(n: int = 1024, m: int = 1024, verify: bool = True,
                  f"packed_over_i32={t_i32 / t_packed:.2f}x{bar} "
                  f"packed_over_broadcast={t_ref / t_packed:.1f}x"))
     _rec(records, "bloom_matrix_pallas_packed_u8", shape, t_packed,
-         reference="bloom_matrix_pallas_int32", speedup=t_i32 / t_packed)
+         reference="bloom_matrix_pallas_int32", speedup=t_i32 / t_packed,
+         policy=auto_pol.label(), engine=packed_eng)
     _rec(records, "bloom_matrix_pallas_int32", shape, t_i32,
-         reference="comparability_matrix", speedup=t_ref / t_i32)
-    _rec(records, "comparability_matrix", shape, t_ref)
+         reference="comparability_matrix", speedup=t_ref / t_i32,
+         policy=i32_pol.label(), engine=i32_eng)
+    _rec(records, "comparability_matrix", shape, t_ref,
+         engine="broadcast_reference")
     return rows
 
 
@@ -155,16 +199,21 @@ def bench_sharded(n: int, m: int, shards: int,
 
     t1 = _time(lambda: ref.classify_all(local))
     ts = _time(lambda: reg.classify_all(local))
+    cls_eng = _last_engine()
     rows.append((f"classify_all_sharded{shards}_{shape}", ts * 1e6,
                  f"bit-identical; 1-device {t1 * 1e6:.0f}us"))
     _rec(records, "classify_all_sharded", shape, ts,
-         reference="classify_all_1shard", speedup=t1 / ts, shards=shards)
+         reference="classify_all_1shard", speedup=t1 / ts, shards=shards,
+         policy=reg.policy.label(), engine=cls_eng)
     t1 = _time(lambda: ref.all_pairs()["a_le_b"], n=1)
     ts = _time(lambda: reg.all_pairs()["a_le_b"], n=1)
+    ring_eng = _engine_of(reg.all_pairs())
     rows.append((f"all_pairs_sharded{shards}_{shape}", ts * 1e6,
-                 f"ppermute ring, bit-identical; 1-device {t1 * 1e6:.0f}us"))
+                 f"halved ppermute ring, bit-identical; "
+                 f"1-device {t1 * 1e6:.0f}us"))
     _rec(records, "all_pairs_ring", shape, ts,
-         reference="all_pairs_1shard", speedup=t1 / ts, shards=shards)
+         reference="all_pairs_1shard", speedup=t1 / ts, shards=shards,
+         policy=reg.policy.label(), engine=ring_eng)
     return rows
 
 
@@ -181,6 +230,7 @@ def bench_classify_all(n: int = 1024, m: int = 1024,
     rt.clock = registry.get("peer0")
 
     t_fleet = _time(lambda: registry.classify_all(rt.clock))
+    cls_eng = _last_engine()
     rows.append((f"classify_all_{shape}", t_fleet * 1e6,
                  f"{n / t_fleet / 1e3:.1f} Kpeers/s one device call (packed)"))
 
@@ -191,7 +241,8 @@ def bench_classify_all(n: int = 1024, m: int = 1024,
     rows.append((f"lineage_loop_{shape}", t_loop * 1e6,
                  f"extrapolated from 64 peers; {t_loop / t_fleet:.1f}x slower"))
     _rec(records, "classify_all_packed", shape, t_fleet,
-         reference="per_peer_lineage_loop", speedup=t_loop / t_fleet)
+         reference="per_peer_lineage_loop", speedup=t_loop / t_fleet,
+         policy=registry.policy.label(), engine=cls_eng)
     return rows
 
 
@@ -202,15 +253,18 @@ def bench_gossip(n: int = 1024, m: int = 1024,
     shape = f"n{n}_m{m}"
     registry = _filled_registry(n, m)
     local = registry.get("peer0")
-    cfg = GossipConfig(fp_threshold=1.0, push_back=False)
+    cfg = GossipConfig(policy=CausalPolicy(fp_threshold=1.0),
+                       push_back=False)
     t = _time(lambda: gossip_round(registry, local, cfg)[0].cells)
     rows.append((f"gossip_round_{shape}", t * 1e6,
                  f"{1.0 / t:.2f} rounds/s full classify+merge"))
-    _rec(records, "gossip_round", shape, t)
+    _rec(records, "gossip_round", shape, t, policy=cfg.policy.label(),
+         engine=_last_engine())
     t_h = _time(lambda: fleet_health(registry).n_components, n=1)
     rows.append((f"fleet_health_{shape}", t_h * 1e6,
                  "all-pairs + fork components + fp histogram"))
-    _rec(records, "fleet_health", shape, t_h)
+    _rec(records, "fleet_health", shape, t_h,
+         policy=registry.policy.label(), engine=_last_engine())
     return rows
 
 

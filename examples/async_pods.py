@@ -21,6 +21,7 @@ from repro.models.config import ModelConfig
 from repro.models.params import init_params
 from repro.runtime.async_trainer import (AsyncConfig, AsyncCoordinator,
                                          run_pod_round)
+from repro.causal import CausalPolicy
 from repro.runtime.clock_runtime import ClockConfig
 from repro.runtime.training import cross_entropy
 
@@ -30,7 +31,8 @@ def main():
                       n_kv_heads=4, d_head=32, d_ff=256, vocab=4096,
                       dtype="float32", attn_chunk=64)
     a_cfg = AsyncConfig(n_pods=4, local_steps=4, outer_lr=0.6)
-    c_cfg = ClockConfig(m=512, straggler_gap=8.0)
+    c_cfg = ClockConfig(m=512, straggler_gap=8.0,
+                        policy=CausalPolicy(fp_threshold=1e-4))
     params = init_params(jax.random.PRNGKey(0), cfg)
     coord = AsyncCoordinator(params, a_cfg, c_cfg)
     pods = coord.add_pods(list(range(a_cfg.n_pods)), c_cfg)

@@ -8,6 +8,7 @@ sys.path.insert(0, "src")
 
 import jax.numpy as jnp
 
+from repro import causal
 from repro.core import clock as bc
 from repro.core.hashing import stable_event_id
 from repro.kernels import ops
@@ -32,14 +33,16 @@ def main():
     # B records its own event
     b = bc.tick(b, *ev("B", 0))
 
-    o = bc.compare(a, b)
-    print(f"A -> B?   {bool(o.a_le_b)}  (fp rate {float(o.fp_a_before_b):.4f})")
-    print(f"B -> A?   {bool(o.b_le_a)}")
-    print(f"concurrent? {bool(o.concurrent)}  (exact — no false negatives)")
+    # the public causality API: typed results + the uniform Eq. 3 gate
+    o = causal.compare(a, b)
+    print(f"A -> B?   {bool(o.before())}  (fp rate {float(o.fp_ab):.4f})")
+    print(f"B -> A?   {bool(o.after())}")
+    print(f"confident at 1e-3? {bool(o.confident(1e-3))}")
+    print(f"concurrent? {bool(o.concurrent())}  (exact — no false negatives)")
 
     # now a third node C that never talked to anyone
     c = bc.tick(bc.zeros(64, 4), *ev("C", 0))
-    print(f"A vs C concurrent? {bool(bc.compare(a, c).concurrent)}")
+    print(f"A vs C concurrent? {bool(causal.compare(a, c).concurrent())}")
 
     # paper §4 compression: (base)[residuals]
     for i in range(200):
@@ -54,6 +57,18 @@ def main():
     out = ops.merge_compare(batch_a, batch_b)
     print(f"kernel fused merge+compare over batch of 8: "
           f"a_le_b={out['a_le_b'].tolist()}")
+
+    # bulk comparisons go through the CausalEngine front-door: one
+    # dispatch surface over every Pallas engine (packed u8 / MXU / i32)
+    engine = causal.CausalEngine(causal.CausalPolicy(fp_threshold=1e-3))
+    clocks = jnp.stack([a.logical_cells(), b.logical_cells(),
+                        c.logical_cells()])
+    mats = engine.pairs(clocks)                  # all-pairs, one call
+    print(f"pairs (engine={mats.engine}): concurrent=\n"
+          f"{mats.concurrent().astype(int)}")
+    res = engine.classify(a, clocks)             # one-vs-many, one call
+    print(f"classify A vs [A,B,C]: before={res.before().tolist()} "
+          f"confident={res.confident(1e-3).tolist()}")
 
     # the paper's worked fp example: m=6, ΣB=10, ΣA=7 -> 0.29
     print(f"Eq.3 paper example: {float(bc.fp_rate(7, 10, 6)):.2f} (paper: 0.29)")

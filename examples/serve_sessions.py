@@ -15,6 +15,7 @@ import jax
 from repro.core import clock as bc
 from repro.models.config import ModelConfig
 from repro.models.params import init_params
+from repro.causal import CausalPolicy
 from repro.runtime.clock_runtime import ClockConfig
 from repro.serving.engine import ServeConfig, ServingEngine
 
@@ -25,7 +26,7 @@ def main():
                       dtype="float32", attn_chunk=64)
     params = init_params(jax.random.PRNGKey(0), cfg)
     s_cfg = ServeConfig(max_batch=4, max_seq=96)
-    c_cfg = ClockConfig(m=512, fp_threshold=0.999999)
+    c_cfg = ClockConfig(m=512, policy=CausalPolicy(fp_threshold=0.999999))
 
     rep_a = ServingEngine(params, cfg, s_cfg, c_cfg, replica_id="A")
     rep_b = ServingEngine(params, cfg, s_cfg, c_cfg, replica_id="B")

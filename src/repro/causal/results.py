@@ -1,0 +1,265 @@
+"""Typed results of the unified causality API.
+
+The paper's contract is one sentence: compare two timestamps, get a
+partial order plus an Eq. 3 false-positive rate.  These classes ARE
+that contract — every compare engine (int32 fallback, packed triangle,
+MXU thermometer, promoted-row overlay, sharded ring) returns one of
+them through the ``CausalEngine`` front-door, and every consumer applies
+the Eq. 3 confidence gate through the same ``.confident(threshold)``
+accessor instead of re-implementing ``fp <= threshold`` by hand.
+
+All three classes are registered pytrees (jit / vmap / device_put safe;
+the dispatch metadata rides along as static aux data) and keep the
+array leaves the engines produced — accessors never re-derive flags, so
+values stay bit-identical to the raw kernel outputs.
+
+``ComparisonMatrix`` and ``ClassifyResult`` also answer the legacy
+mapping protocol (``res["a_le_b"]``, ``.items()``) with the exact key
+set the pre-front-door dicts used, so downstream numpy plumbing keeps
+working during migration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Comparison", "ComparisonMatrix", "ClassifyResult"]
+
+
+def _where(cond, a, b):
+    """Backend-preserving select: numpy leaves (a host-side
+    ``device_get`` result) stay numpy — no device round-trip from a
+    pure accessor — while traced/jax leaves stay jax."""
+    if isinstance(cond, np.ndarray):
+        return np.where(cond, a, b)
+    return jnp.where(cond, a, b)
+
+
+class _MappingMixin:
+    """Legacy dict-style access over the old result-dict key set."""
+
+    _KEYS: tuple = ()
+
+    def __getitem__(self, key):
+        try:
+            return getattr(self, f"_k_{key}")()
+        except AttributeError:
+            raise KeyError(key) from None
+
+    def keys(self):
+        return iter(self._KEYS)
+
+    def items(self):
+        return ((k, self[k]) for k in self._KEYS)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Comparison:
+    """Pairwise (or batched-pairwise) comparison of clocks A vs B.
+
+    Leaves broadcast over any batch shape; produced by
+    ``repro.causal.compare`` and jit/vmap-composable.
+    """
+
+    a_le_b: jax.Array          # bool[...]: A cell-wise dominated by B
+    b_le_a: jax.Array
+    fp_ab: jax.Array           # float32[...]: Eq. 3 fp of "A -> B"
+    fp_ba: jax.Array
+    sum_a: jax.Array           # float32[...]: total increments
+    sum_b: jax.Array
+
+    def tree_flatten(self):
+        return ((self.a_le_b, self.b_le_a, self.fp_ab, self.fp_ba,
+                 self.sum_a, self.sum_b), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    # ---- accessors ----
+    def before(self):
+        """The claim "A happened-before B" (dominance; includes equal)."""
+        return self.a_le_b
+
+    def after(self):
+        """The claim "B happened-before A"."""
+        return self.b_le_a
+
+    def equal(self):
+        return self.a_le_b & self.b_le_a
+
+    def concurrent(self):
+        """Neither dominates — *exact*, no false negatives (paper §3)."""
+        return ~(self.a_le_b | self.b_le_a)
+
+    def confident(self, threshold: float):
+        """The uniform decision rule: "A -> B" holds AND its Eq. 3 fp is
+        within ``threshold`` — the gate every runtime admit path uses."""
+        return self.a_le_b & (self.fp_ab <= threshold)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ComparisonMatrix(_MappingMixin):
+    """All-pairs comparison: [N, M] flag/fp matrices + per-row/col sums.
+
+    ``conc`` is carried as a leaf (not derived): engines mask dead slots
+    to all-False across ALL flag kinds, which ``~(le | ge)`` could not
+    represent.
+    """
+
+    le: jax.Array              # bool[N, M]: row clock ≼ col clock
+    ge: jax.Array              # bool[N, M]
+    conc: jax.Array            # bool[N, M]: exact concurrency
+    fp: jax.Array              # float32[N, M]: Eq. 3 fp of "row -> col"
+    row_sums: jax.Array        # float32[N]
+    col_sums: jax.Array        # float32[M]
+    engine: Optional[str] = None      # dispatch metadata (static)
+    blocks: Optional[tuple] = None    # resolved block shapes (static)
+
+    _KEYS = ("a_le_b", "b_le_a", "concurrent", "fp", "row_sums", "col_sums")
+
+    def tree_flatten(self):
+        return ((self.le, self.ge, self.conc, self.fp,
+                 self.row_sums, self.col_sums), (self.engine, self.blocks))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @classmethod
+    def from_dict(cls, d: dict, *, engine: str | None = None,
+                  blocks: tuple | None = None) -> "ComparisonMatrix":
+        """Wrap a raw engine result dict (leaves adopted, not copied)."""
+        return cls(le=d["a_le_b"], ge=d["b_le_a"], conc=d["concurrent"],
+                   fp=d["fp"], row_sums=d["row_sums"],
+                   col_sums=d["col_sums"], engine=engine, blocks=blocks)
+
+    # ---- accessors ----
+    def before(self):
+        return self.le
+
+    def after(self):
+        return self.ge
+
+    def concurrent(self):
+        return self.conc
+
+    def equal(self):
+        return self.le & self.ge
+
+    def confident(self, threshold: float):
+        """"row -> col" claims whose Eq. 3 fp is within ``threshold``."""
+        return self.le & (self.fp <= threshold)
+
+    # legacy dict keys
+    def _k_a_le_b(self):
+        return self.le
+
+    def _k_b_le_a(self):
+        return self.ge
+
+    def _k_concurrent(self):
+        return self.conc
+
+    def _k_fp(self):
+        return self.fp
+
+    def _k_row_sums(self):
+        return self.row_sums
+
+    def _k_col_sums(self):
+        return self.col_sums
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ClassifyResult(_MappingMixin):
+    """One-vs-many classification of a query clock against N peers."""
+
+    q_le_p: jax.Array          # bool[N]: query ≼ peer (peer is ahead)
+    p_le_q: jax.Array          # bool[N]: peer ≼ query (peer in our past)
+    sum_q: jax.Array           # float32 scalar
+    sum_p: jax.Array           # float32[N]
+    fp_q_before_p: jax.Array   # float32[N]: Eq. 3 fp of "query -> peer"
+    fp_p_before_q: jax.Array
+    engine: Optional[str] = None      # dispatch metadata (static)
+    blocks: Optional[tuple] = None    # resolved block shapes (static)
+
+    _KEYS = ("q_le_p", "p_le_q", "sum_q", "sum_p",
+             "fp_q_before_p", "fp_p_before_q")
+
+    def tree_flatten(self):
+        return ((self.q_le_p, self.p_le_q, self.sum_q, self.sum_p,
+                 self.fp_q_before_p, self.fp_p_before_q),
+                (self.engine, self.blocks))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @classmethod
+    def from_dict(cls, d: dict, *, engine: str | None = None,
+                  blocks: tuple | None = None) -> "ClassifyResult":
+        return cls(q_le_p=d["q_le_p"], p_le_q=d["p_le_q"], sum_q=d["sum_q"],
+                   sum_p=d["sum_p"], fp_q_before_p=d["fp_q_before_p"],
+                   fp_p_before_q=d["fp_p_before_q"], engine=engine,
+                   blocks=blocks)
+
+    # ---- accessors ----
+    def before(self):
+        """Per-peer claim "query happened-before peer"."""
+        return self.q_le_p
+
+    def after(self):
+        """Per-peer claim "peer happened-before query"."""
+        return self.p_le_q
+
+    def equal(self):
+        return self.q_le_p & self.p_le_q
+
+    def concurrent(self):
+        return ~(self.q_le_p | self.p_le_q)
+
+    def fp_before(self):
+        """fp of "query -> peer"; exact (0) where the clocks are equal."""
+        return _where(self.equal(), 0.0, self.fp_q_before_p)
+
+    def fp_after(self):
+        """fp of "peer -> query"; exact (0) where the clocks are equal."""
+        return _where(self.equal(), 0.0, self.fp_p_before_q)
+
+    def claimed_fp(self):
+        """fp of the direction actually claimed per peer; SAME and
+        FORKED verdicts are exact (paper §3) and report 0."""
+        fp = _where(self.p_le_q, self.fp_p_before_q, self.fp_q_before_p)
+        return _where(self.equal() | self.concurrent(), 0.0, fp)
+
+    def confident(self, threshold: float):
+        """The uniform Eq. 3 gate over the claimed direction (exact
+        verdicts are always confident)."""
+        return self.claimed_fp() <= threshold
+
+    # legacy dict keys
+    def _k_q_le_p(self):
+        return self.q_le_p
+
+    def _k_p_le_q(self):
+        return self.p_le_q
+
+    def _k_sum_q(self):
+        return self.sum_q
+
+    def _k_sum_p(self):
+        return self.sum_p
+
+    def _k_fp_q_before_p(self):
+        return self.fp_q_before_p
+
+    def _k_fp_p_before_q(self):
+        return self.fp_p_before_q

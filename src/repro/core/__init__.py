@@ -7,4 +7,12 @@
 - ``sim``          N-node protocol simulator with ground-truth scoring
 """
 from repro.core import clock, hashing, history, sim, vector_clock  # noqa: F401
-from repro.core.clock import BloomClock, compare, fp_rate, merge, tick, zeros  # noqa: F401
+from repro.core.clock import (  # noqa: F401
+    BloomClock,
+    compare,
+    fp_rate,
+    merge,
+    ordering,
+    tick,
+    zeros,
+)

@@ -8,18 +8,22 @@ jit/vmap/pjit compatible; batched clocks simply carry leading batch dims.
 Paper-op mapping:
   tick        §3 step 2  (hash event k times, increment cells)
   merge       §3 step 3  (element-wise max)
-  compare     §3          (cell-wise dominance; exact concurrency detection)
+  ordering    §3          (cell-wise dominance; exact concurrency detection)
   fp_rate     §3 Eq. 3    ((1-(1-1/m)^{ΣB})^{ΣA}), log-stable
   compress    §4          ((c)[residuals] base-offset form)
 
 The hot paths (tick / fused merge+compare) have Pallas TPU kernels in
-``repro.kernels``; this module is the reference implementation and the
-API the rest of the framework uses (the kernels are drop-in via
-``repro.kernels.ops``).
+``repro.kernels``; this module is the reference implementation.  For
+comparisons, the public surface is ``repro.causal`` (``causal.compare``
+for typed pairwise results, ``CausalEngine`` for the bulk verbs); the
+old ``compare`` name remains importable as a ``DeprecationWarning``
+shim over ``ordering``, the in-module reference the internal helpers
+(``happened_before``, ``comparability_matrix``) build on.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any
 
@@ -34,6 +38,7 @@ __all__ = [
     "zeros",
     "tick",
     "merge",
+    "ordering",
     "compare",
     "Ordering",
     "fp_rate",
@@ -168,8 +173,13 @@ def fp_rate(sum_a, sum_b, m: int) -> jax.Array:
     return jnp.exp(sum_a * jnp.log(inner))
 
 
-def compare(a: BloomClock, b: BloomClock) -> Ordering:
-    """Cell-wise partial-order comparison + Eq. 3 confidence, one pass."""
+def ordering(a: BloomClock, b: BloomClock) -> Ordering:
+    """Cell-wise partial-order comparison + Eq. 3 confidence, one pass.
+
+    The algorithmic reference every kernel is validated against.  New
+    code that wants accessor-style results should prefer
+    ``repro.causal.compare`` (same math, typed ``Comparison`` pytree).
+    """
     la = a.logical_cells()
     lb = b.logical_cells()
     a_le_b = jnp.all(la <= lb, axis=-1)
@@ -186,6 +196,16 @@ def compare(a: BloomClock, b: BloomClock) -> Ordering:
         fp_a_before_b=fp_rate(sa, sb, a.m),
         fp_b_before_a=fp_rate(sb, sa, a.m),
     )
+
+
+def compare(a: BloomClock, b: BloomClock) -> Ordering:
+    """DEPRECATED alias of ``ordering`` — use ``repro.causal.compare``
+    (typed ``Comparison`` with accessors) or ``ordering`` directly."""
+    warnings.warn(
+        "repro.core.clock.compare is deprecated; use repro.causal.compare "
+        "(typed Comparison results) or repro.core.clock.ordering",
+        DeprecationWarning, stacklevel=2)
+    return ordering(a, b)
 
 
 def compress(c: BloomClock) -> BloomClock:
@@ -246,13 +266,15 @@ def from_wire(snap: dict) -> BloomClock:
 
 @partial(jax.jit, static_argnames=("threshold",))
 def happened_before(a: BloomClock, b: BloomClock, threshold: float = 0.01):
-    """True where "A -> B" holds with fp rate below ``threshold``.
+    """True where "A -> B" holds with fp rate within ``threshold``.
 
     This is the decision rule the runtime uses (checkpoint lineage, async
-    merge guards): dominance AND confidence.
+    merge guards): dominance AND confidence — the same ``fp <= t`` gate
+    as ``causal.Comparison.confident(t)`` and every registry/gossip
+    admit path (an exact-boundary fp == t now passes, matching them).
     """
-    o = compare(a, b)
-    return jnp.logical_and(o.a_le_b, o.fp_a_before_b < threshold)
+    o = ordering(a, b)
+    return jnp.logical_and(o.a_le_b, o.fp_a_before_b <= threshold)
 
 
 def comparability_matrix(clocks: BloomClock) -> dict[str, jax.Array]:
@@ -265,7 +287,7 @@ def comparability_matrix(clocks: BloomClock) -> dict[str, jax.Array]:
     bi = jax.tree.map(lambda x: x[None, :] if x.ndim == 1 else x[None, :, :], clocks)
     ai = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape[1:]), ai)
     bi = jax.tree.map(lambda x: jnp.broadcast_to(x, (n, n) + x.shape[2:]), bi)
-    o = compare(ai, bi)
+    o = ordering(ai, bi)
     return {
         "a_le_b": o.a_le_b,
         "concurrent": o.concurrent,

@@ -228,12 +228,17 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
     a mesh-backed factory so every audited verdict also exercises the
     shard_map kernel paths.
     """
+    from repro.causal import CausalPolicy
     from repro.fleet import gossip as fg
     from repro.fleet import monitor as fm
     from repro.fleet import registry as fr
 
     if gossip_cfg is None:
-        fg_cfg = fg.GossipConfig(fp_threshold=1.0, straggler_gap=np.inf)
+        # accept-everything-comparable audit policy, threaded as a
+        # CausalPolicy so the sim exercises the same config surface the
+        # runtime uses
+        fg_cfg = fg.GossipConfig(policy=CausalPolicy(fp_threshold=1.0),
+                                 straggler_gap=np.inf)
     else:
         fg_cfg = gossip_cfg
     rng = np.random.default_rng(cfg.seed)

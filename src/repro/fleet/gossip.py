@@ -32,9 +32,11 @@ scalar base + fits-u8 flag.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
+from repro.causal import CausalPolicy
 from repro.core import clock as bc
 from repro.fleet import registry as reg
 
@@ -46,6 +48,15 @@ class GossipConfig:
     fp_threshold: float = 1e-4    # Eq. 3 confidence gate for merges
     straggler_gap: float = 64.0   # clock-sum ticks below alive median
     push_back: bool = True        # write the union into accepted rows
+    # the one source of truth when set: rounds gate on
+    # ``policy.fp_threshold`` (overriding the scalar above), so a
+    # runtime can thread its CausalPolicy straight through gossip
+    policy: Optional[CausalPolicy] = None
+
+    @property
+    def fp_gate(self) -> float:
+        return (self.policy.fp_threshold if self.policy is not None
+                else self.fp_threshold)
 
 
 @dataclasses.dataclass
@@ -92,7 +103,7 @@ def gossip_round(
             (med - view.sums) > cfg.straggler_gap)
 
     comparable = alive & ~quarantined & ~stragglers
-    unconfident = comparable & (view.fp > cfg.fp_threshold)
+    unconfident = comparable & ~view.confident(cfg.fp_gate)
     accepted = comparable & ~unconfident
 
     merged = local

@@ -95,13 +95,12 @@ def fleet_health(
     **matrix_kw,
 ) -> FleetHealth:
     """One all-pairs kernel call -> full fleet health snapshot."""
-    mats = registry.all_pairs(**matrix_kw)
-    h = jax.device_get(mats)
+    h = jax.device_get(registry.all_pairs(**matrix_kw))   # ComparisonMatrix
     alive = np.asarray(registry.alive)
     n_alive = int(alive.sum())
 
-    le = h["a_le_b"]
-    ge = h["b_le_a"]
+    le = h.before()
+    ge = h.after()
     comparable = (le | ge)
     np.fill_diagonal(comparable, False)
 
@@ -112,15 +111,15 @@ def fleet_health(
 
     labels, n_components = fork_components(comparable, alive)
 
-    sums = h["row_sums"]
+    sums = h.row_sums
     straggler = np.zeros_like(alive)
     if n_alive:
         med = float(np.median(sums[alive]))
         straggler = alive & ((med - sums) > straggler_gap)
 
     # ordered (strict) claims row->col: dominance holds and clocks differ
-    strict = le & ~(le & ge) & pair_mask
-    fps = h["fp"][strict]
+    strict = le & ~h.equal() & pair_mask
+    fps = h.fp[strict]
     edges = np.linspace(-30.0, 0.0, fp_bins + 1)
     hist, _ = np.histogram(np.log10(np.clip(fps, 1e-30, 1.0)), bins=edges)
 

@@ -20,10 +20,12 @@ materialized int32 slab until the row is overwritten with packable data
 
 Slot assignment is host-side (a dict + free list); everything that
 touches cell data is batched: ``admit_many`` / ``update_many`` are one
-scatter each, ``classify_all`` is ONE device call through the packed
-one-vs-many Pallas kernel, ``all_pairs`` gathers the alive rows and
-runs the symmetric triangle kernel over them only (dead slots cost no
-work and report all-False flags).
+scatter each, and all classification goes through the ONE dispatch
+front-door — ``repro.causal.CausalEngine`` — built from the registry's
+``CausalPolicy``: ``classify_all`` is ``engine.classify`` over the
+packed slab (one device call), ``all_pairs`` is ``engine.pairs`` with
+the alive mask (dead slots cost no work and report all-False flags;
+promoted rows get the exact int32 rim inside the engine).
 
 Status codes (``FleetView.status``) are small ints so a whole fleet's
 classification is a single int8 vector:
@@ -56,8 +58,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.causal import CausalEngine, CausalPolicy, PackedSlab
 from repro.core import clock as bc
-from repro.kernels import ops, pack
+from repro.kernels import pack
 from repro.sharding import FLEET_AXIS, slab_shardings
 
 __all__ = [
@@ -105,6 +108,12 @@ class FleetView:
             for code, name in STATUS_NAMES.items()
         }
 
+    def confident(self, threshold: float) -> np.ndarray:
+        """The uniform Eq. 3 gate over the claimed direction, mirroring
+        ``causal.ClassifyResult.confident`` (exact verdicts — SAME,
+        FORKED, DEAD — carry fp 0 and are always confident)."""
+        return self.fp <= threshold
+
 
 @jax.jit
 def _scatter_rows(cells_u8, base, sums, alive, idx, new_u8, new_base, new_sums):
@@ -141,10 +150,22 @@ class ClockRegistry:
     """Peer clock registry: one device slab, or mesh-sharded row shards."""
 
     def __init__(self, capacity: int, m: int, k: int = 4, *,
-                 mesh=None, axis: str = FLEET_AXIS):
+                 mesh=None, axis: str = FLEET_AXIS,
+                 policy: CausalPolicy | None = None):
         self.capacity = capacity
         self.m = m
         self.k = k
+        # the CausalPolicy is the one source of truth for dispatch: the
+        # mesh/axis arguments fold into it (explicit args win so the
+        # pre-policy constructor signature keeps working), and every
+        # comparison below goes through the resulting CausalEngine
+        base_policy = policy if policy is not None else CausalPolicy()
+        if mesh is None:
+            mesh = base_policy.mesh
+            if mesh is not None and axis == FLEET_AXIS:
+                axis = base_policy.axis
+        self.policy = dataclasses.replace(base_policy, mesh=mesh, axis=axis)
+        self.engine = CausalEngine(self.policy)
         self.mesh = mesh
         self.axis = axis if mesh is not None else None
         if mesh is not None:
@@ -217,9 +238,12 @@ class ClockRegistry:
             self._mat = mat
         return self._mat
 
-    def _uniform_base(self) -> bool:
-        b = self._base_host[self._alive_host]
-        return b.size == 0 or bool((b == b[0]).all())
+    def _slab(self) -> PackedSlab:
+        """The engine-facing view of the slab arrays (wide rows and the
+        host base copy ride along so the front-door can overlay promoted
+        rows and probe base uniformity without device syncs)."""
+        return PackedSlab(self.cells_u8, self.base,
+                          base_host=self._base_host, wide=self._wide)
 
     # ---- batched mutation ----
     def admit_many(self, peers: dict) -> dict:
@@ -310,215 +334,48 @@ class ClockRegistry:
         local past), a peer the local clock is ≼ is a DESCENDANT, and
         incomparable peers are FORKED (exact, §3).
 
-        Sharded mode runs the shard_map'd packed kernel over the row
-        shards (query replicated, no cross-device traffic).  Promoted
-        rows never drop the slab to the int32 fallback anymore: the
-        bulk stays packed and only the promoted handful is re-classified
-        wide, then patched in (``ops.overlay_wide_classify``).
+        One ``engine.classify`` call: the front-door runs the packed
+        one-vs-many kernel (shard_map'd over the row shards when the
+        policy carries a mesh) and overlays promoted rows through the
+        exact int32 kernel — the bulk never drops to the fallback.
         """
-        q = local.logical_cells().astype(jnp.int32)
-        if self.mesh is not None:
-            out = ops.classify_vs_many_packed_sharded(
-                q, self.cells_u8, self.base, mesh=self.mesh, axis=self.axis)
-        else:
-            out = ops.classify_vs_many_packed(q, self.cells_u8, self.base)
-        if self._wide:
-            widx = sorted(self._wide)
-            out = ops.overlay_wide_classify(
-                out, q, widx,
-                jnp.asarray(np.stack([self._wide[s] for s in widx])))
-        h = jax.device_get(out)          # single host transfer for the dict
+        res = jax.device_get(          # single host transfer for the pytree
+            self.engine.classify(local, self._slab()))
         alive = self._alive_host
-        p_le_q = h["p_le_q"]
-        q_le_p = h["q_le_p"]
-        equal = p_le_q & q_le_p
+        p_le_q = res.after()           # peer ≼ local
+        q_le_p = res.before()          # local ≼ peer
+        equal = res.equal()
         status = np.full(self.capacity, FORKED, np.int8)
         status[p_le_q] = ANCESTOR
         status[q_le_p] = DESCENDANT
         status[equal] = SAME
         status[~alive] = DEAD
         # fp of the direction actually claimed; SAME and FORKED are exact
-        fp = np.where(p_le_q, h["fp_p_before_q"], h["fp_q_before_p"])
-        fp = np.where(equal | ~(p_le_q | q_le_p), 0.0, fp).astype(np.float32)
+        fp = np.asarray(res.claimed_fp(), np.float32)
         fp[~alive] = 0.0
         return FleetView(
             status=status,
             fp=fp,
-            sums=h["sum_p"],
+            sums=res.sum_p,
             alive=alive.copy(),
-            local_sum=float(h["sum_q"]),
+            local_sum=float(res.sum_q),
         )
 
-    def all_pairs(self, **kw) -> dict:
-        """Tiled all-pairs compare; dead slots report all-False flags
+    def all_pairs(self, **kw):
+        """Tiled all-pairs compare -> ``causal.ComparisonMatrix`` (also
+        answers the legacy dict keys); dead slots report all-False flags
         and ``fp = row_sums = 0`` — no misleading verdicts from stale
         cells.
 
-        Unsharded, fully-packed fleets gather the alive rows into a
-        dense sub-slab (dead slots cost no compute) and sweep the
-        symmetric triangle engine.  Sharded fleets run the block-row
-        ``ppermute`` ring over the full capacity slab — even row shards
-        beat gather-compaction across devices — and mask dead slots
-        after.  Promoted rows no longer drop the whole slab to the
-        int32 fallback: the O(N^2) bulk stays packed and only the
-        promoted handful is compared wide (``_host_pairs``).
+        One ``engine.pairs`` call over the packed slab: the front-door
+        alive-compacts unsharded fleets (dead slots cost no compute),
+        runs the block-row ``ppermute`` ring and masks dead slots on
+        device for sharded ones, and patches promoted rows through the
+        exact int32 rim in both modes.  ``**kw`` carries per-call
+        dispatch overrides (engine / block shapes / interpret).
         """
-        cap = self.capacity
-        aidx = np.flatnonzero(self._alive_host)
-        if aidx.size == 0:
-            false = jnp.zeros((cap, cap), bool)
-            return {
-                "a_le_b": false, "b_le_a": false, "concurrent": false,
-                "fp": jnp.zeros((cap, cap), jnp.float32),
-                "row_sums": jnp.zeros((cap,), jnp.float32),
-                "col_sums": jnp.zeros((cap,), jnp.float32),
-            }
-        if self.mesh is not None:
-            bulk = ops.compare_matrix_packed_sharded(
-                self.cells_u8, self.base, mesh=self.mesh, axis=self.axis,
-                uniform_base=self._uniform_base(), **kw)
-            if aidx.size == cap and self.packed:
-                return bulk
-            if not self.packed:
-                # promoted rows: patch the O(P * A) int32 rim into the
-                # bulk ON DEVICE — the [cap, cap] matrices stay sharded
-                bulk = self._device_wide_overlay(bulk, aidx, **kw)
-            # dead slots report nothing; masking is device-side too, so
-            # a huge sharded fleet never materializes flags on host
-            return _mask_dead_pairs(bulk, self.alive)
-        if aidx.size == cap and self.packed:
-            return ops.compare_matrix_packed(
-                self.cells_u8, self.base,
-                uniform_base=self._uniform_base(), **kw)
-        if self.packed:
-            jidx = jnp.asarray(aidx)
-            sub = ops.compare_matrix_packed(
-                jnp.take(self.cells_u8, jidx, axis=0),
-                jnp.take(self.base, jidx),
-                uniform_base=self._uniform_base(), **kw)
-            return _expand_alive(sub, jidx, cap)
-        return self._host_pairs(aidx, **kw)
-
-    def _alive_widx(self, aidx: np.ndarray) -> np.ndarray:
-        """Promoted slots restricted to the given alive index set."""
-        keep = set(int(s) for s in aidx)
-        return np.asarray(
-            sorted(s for s in self._wide if s in keep), np.int64)
-
-    def _wide_rim(self, aidx: np.ndarray, widx: np.ndarray, **kw) -> dict:
-        """Exact int32 compare of the promoted rows vs every alive row
-        ([P, A]).  Unpacks ONLY the gathered alive rows — never the
-        full-capacity slab — and patches the promoted rows' true values
-        over their clipped residuals.
-
-        Known scale limit (ROADMAP): the gathered [A, m] int32 operand
-        is placed by the gather, so on a mesh-sharded registry the rim
-        still concentrates ~4x the alive u8 bytes on one device; a
-        shard-wise rim (wide rows replicated vs each row shard under
-        shard_map) would remove that.  Promoted rows contradict the §4
-        moving-window premise, so fleets sharded for scale should treat
-        them as an eviction signal, not steady state."""
-        # interpret/block-shape overrides carry over; a packed-engine
-        # hint does not (it can't run on overflowed rows) — and since a
-        # promoted row's span exceeds a byte BY DEFINITION, name the
-        # int32 engine outright and skip the futile span probe
-        rim_kw = {kk: v for kk, v in kw.items()
-                  if kk in ("interpret", "bi", "bj", "bm")}
-        rim_kw["engine"] = "i32"
-        wide_rows = jnp.asarray(
-            np.stack([self._wide[int(s)] for s in widx]))
-        jaidx = jnp.asarray(aidx)
-        alive_i32 = pack.unpack_rows(
-            jnp.take(self.cells_u8, jaidx, axis=0),
-            jnp.take(self.base, jaidx))
-        wpos = {int(s): i for i, s in enumerate(aidx)}
-        alive_i32 = alive_i32.at[
-            jnp.asarray([wpos[int(s)] for s in widx])].set(wide_rows)
-        return ops.compare_matrix(wide_rows, alive_i32, **rim_kw)
-
-    def _device_wide_overlay(self, bulk: dict, aidx: np.ndarray,
-                             **kw) -> dict:
-        """Patch the promoted rows'/cols' flags into the sharded bulk and
-        re-finalize fp from corrected sums, entirely ON DEVICE — the
-        [cap, cap] matrices stay sharded, so even a promoted row on a
-        fleet too large for one device costs only the O(P * cap) rim."""
-        cap, m = self.capacity, self.m
-        widx = self._alive_widx(aidx)
-        if widx.size == 0:
-            return bulk
-        rim = self._wide_rim(aidx, widx, **kw)
-        jw = jnp.asarray(widx)
-        jaidx = jnp.asarray(aidx)
-        P = int(widx.size)
-
-        def patch(mat, row_pa, col_pa):
-            rows_full = jnp.zeros((P, cap), bool).at[:, jaidx].set(row_pa)
-            cols_full = jnp.zeros((P, cap), bool).at[:, jaidx].set(col_pa)
-            mat = jnp.asarray(mat, bool).at[jw, :].set(rows_full)
-            return mat.at[:, jw].set(cols_full.T)
-
-        le = patch(bulk["a_le_b"], rim["a_le_b"], rim["b_le_a"])
-        ge = patch(bulk["b_le_a"], rim["b_le_a"], rim["a_le_b"])
-        sums = jnp.asarray(bulk["row_sums"]).at[jw].set(rim["row_sums"])
-        return {
-            "a_le_b": le, "b_le_a": ge,
-            "concurrent": jnp.logical_not(jnp.logical_or(le, ge)),
-            # same jitted Eq. 3 expression as every engine finalize, over
-            # the corrected sums -> bit-identical to the unsharded path
-            "fp": ops.eq3_outer(sums, sums, m),
-            "row_sums": sums, "col_sums": sums,
-        }
-
-    def _host_pairs(self, aidx: np.ndarray, **kw) -> dict:
-        """Unsharded sparse promoted-row assembly: packed engines over
-        the still-packed alive rows plus the exact int32 rim for the
-        promoted handful, stitched on host (the slab already lives on
-        one device here — the sharded path patches on device instead,
-        see ``_device_wide_overlay``).  fp is re-finalized from the
-        corrected sums through the SAME jitted Eq. 3 expression the
-        engines use (``ops.eq3_outer``), so values stay bit-identical
-        to the single-device int32 fallback this replaces."""
-        cap, m = self.capacity, self.m
-        alive = self._alive_host
-        widx = self._alive_widx(aidx)
-        le = np.zeros((cap, cap), bool)
-        ge = np.zeros((cap, cap), bool)
-        sums = np.zeros(cap, np.float32)
-        pidx = np.asarray([s for s in aidx if s not in self._wide],
-                          np.int64)
-        if pidx.size:
-            b = self._base_host[pidx]
-            sub = jax.device_get(ops.compare_matrix_packed(
-                jnp.take(self.cells_u8, jnp.asarray(pidx), axis=0),
-                jnp.take(self.base, jnp.asarray(pidx)),
-                uniform_base=bool((b == b[0]).all()), **kw))
-            le[np.ix_(pidx, pidx)] = sub["a_le_b"]
-            ge[np.ix_(pidx, pidx)] = sub["b_le_a"]
-            sums[pidx] = sub["row_sums"]
-        if widx.size:
-            rim = jax.device_get(self._wide_rim(aidx, widx, **kw))
-            le[np.ix_(widx, aidx)] = rim["a_le_b"]
-            ge[np.ix_(widx, aidx)] = rim["b_le_a"]
-            le[np.ix_(aidx, widx)] = rim["b_le_a"].T
-            ge[np.ix_(aidx, widx)] = rim["a_le_b"].T
-            sums[widx] = rim["row_sums"]
-        le[~alive] = False
-        le[:, ~alive] = False
-        ge[~alive] = False
-        ge[:, ~alive] = False
-        sums[~alive] = 0.0
-        pair = np.ix_(aidx, aidx)
-        conc = np.zeros((cap, cap), bool)
-        conc[pair] = ~(le[pair] | ge[pair])
-        fp = np.zeros((cap, cap), np.float32)
-        fp[pair] = np.asarray(ops.eq3_outer(
-            jnp.asarray(sums[aidx]), jnp.asarray(sums[aidx]), m))
-        s = jnp.asarray(sums)
-        return {
-            "a_le_b": jnp.asarray(le), "b_le_a": jnp.asarray(ge),
-            "concurrent": jnp.asarray(conc), "fp": jnp.asarray(fp),
-            "row_sums": s, "col_sums": s,
-        }
+        return self.engine.pairs(self._slab(), alive=self._alive_host,
+                                 alive_dev=self.alive, **kw)
 
     # ---- batched merge ----
     def union(self, mask: np.ndarray, local: bc.BloomClock) -> bc.BloomClock:
@@ -584,38 +441,3 @@ class ClockRegistry:
         return packed_ok
 
 
-@jax.jit
-def _mask_dead_pairs(bulk: dict, alive: jax.Array) -> dict:
-    """Device-side dead-slot masking of a full-capacity all-pairs bulk:
-    the sharded ring's counterpart of ``_expand_alive`` (same contract —
-    dead rows/cols report all-False flags and zero fp / sums)."""
-    pair = alive[:, None] & alive[None, :]
-    le = jnp.asarray(bulk["a_le_b"], bool) & pair
-    ge = jnp.asarray(bulk["b_le_a"], bool) & pair
-    sums = jnp.where(alive, bulk["row_sums"], 0.0)
-    return {
-        "a_le_b": le,
-        "b_le_a": ge,
-        "concurrent": jnp.logical_not(jnp.logical_or(le, ge)) & pair,
-        "fp": jnp.where(pair, bulk["fp"], 0.0),
-        "row_sums": sums,
-        "col_sums": sums,
-    }
-
-
-def _expand_alive(sub: dict, jidx: jax.Array, cap: int) -> dict:
-    """Scatter an alive-compacted result back to [capacity, capacity]."""
-    rows = jidx[:, None]
-    cols = jidx[None, :]
-    def mat(x, fill, dtype):
-        return jnp.full((cap, cap), fill, dtype).at[rows, cols].set(x)
-    def vec(x):
-        return jnp.zeros((cap,), x.dtype).at[jidx].set(x)
-    return {
-        "a_le_b": mat(sub["a_le_b"], False, bool),
-        "b_le_a": mat(sub["b_le_a"], False, bool),
-        "concurrent": mat(sub["concurrent"], False, bool),
-        "fp": mat(sub["fp"], 0.0, jnp.float32),
-        "row_sums": vec(sub["row_sums"]),
-        "col_sums": vec(sub["col_sums"]),
-    }

@@ -7,6 +7,8 @@
                      (dot_general thermometer) dominance reduction
 - ``pack``           quantized slab layout: u8 window residuals + base
 - ``autotune``       measured block-shape/engine table the wrappers use
-- ``ops``            the public padded/dispatched entry points
+- ``ops``            padded/dispatched wrappers — the engine room of the
+                     ``repro.causal.CausalEngine`` front-door (the old
+                     public comparison names remain as deprecation shims)
 - ``ref``            pure-jnp oracles for tests
 """

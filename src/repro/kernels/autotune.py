@@ -182,11 +182,11 @@ def autotune_matrix(N: int, m: int, *, span: int = 30,
     for engine, bi, bj, bm in candidates:
         try:
             if engine == "i32":
-                fn = lambda: ops.compare_matrix(
+                fn = lambda: ops._compare_matrix(
                     cells_i32, cells_i32, engine="i32",
                     bi=bi, bj=bj, bm=bm, interpret=interpret)
             else:
-                fn = lambda: ops.compare_matrix_packed(
+                fn = lambda: ops._compare_matrix_packed(
                     cells, base, engine=engine,
                     bi=bi, bj=bj, bm=bm, interpret=interpret)
             dt = _measure(fn)
@@ -222,7 +222,7 @@ def autotune_one_vs_many(N: int, m: int, *, span: int = 30,
                     and _divisor_blocks(m, (bm,), 128)):
                 continue
             try:
-                dt = _measure(lambda: ops.classify_vs_many_packed(
+                dt = _measure(lambda: ops._classify_vs_many_packed(
                     q, cells, base, bn=bn, bm=bm, interpret=interpret))
             except Exception:
                 continue

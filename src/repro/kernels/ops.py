@@ -1,4 +1,4 @@
-"""Public wrappers around the bloom-clock Pallas kernels.
+"""Kernel wrappers around the bloom-clock Pallas kernels.
 
 Handles: probe-index precomputation (hashing), the shared pad-and-crop
 plan (``tile2d`` — every wrapper pads through it instead of duplicating
@@ -10,17 +10,23 @@ and un-padding.
 
 The packed engines consume the quantized slab layout from
 ``kernels.pack`` (u8 window residuals + per-slot int32 base).  The
-int32 entry points (``compare_matrix`` / ``classify_vs_many``) remain
-drop-in: ``compare_matrix`` packs on the fly whenever the value span
+int32 entry points (``_compare_matrix`` / ``_classify_vs_many``) remain
+drop-in: ``_compare_matrix`` packs on the fly whenever the value span
 fits a byte and silently falls back to the int32 kernel otherwise.
 
-The rest of the framework calls these; ``repro.core.clock`` stays the
-algorithmic reference.
+PUBLIC SURFACE: the comparison wrappers here are the engine room of
+``repro.causal.CausalEngine`` — new code should call its two verbs
+(``engine.classify`` / ``engine.pairs``) instead of these.  The
+pre-front-door names (``compare_matrix``, ``classify_vs_many``, ...)
+remain importable as thin ``DeprecationWarning`` shims that delegate to
+the same implementations, so their results are bit-identical.
+``repro.core.clock`` stays the algorithmic reference.
 """
 from __future__ import annotations
 
 import functools
 import math
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +65,19 @@ __all__ = [
 ]
 
 LANE = 128  # TPU lane width
+
+# Most recent comparison dispatch decision (op, engine, block shapes),
+# recorded by the resolution helpers below.  Engine/block resolution is
+# host-side (never traced), so this is accurate per call; the
+# ``CausalEngine`` front-door snapshots it into result metadata and the
+# fleet benchmark records it so perf claims name the engine they
+# measured.
+LAST_DISPATCH: dict = {}
+
+
+def _note_dispatch(op: str, engine: str, **blocks) -> None:
+    LAST_DISPATCH.clear()
+    LAST_DISPATCH.update({"op": op, "engine": engine, **blocks})
 
 # widest value span (max - min logical cell) the MXU thermometer engine
 # accepts; FLOPs scale linearly with it, so wide windows go elementwise
@@ -187,7 +206,7 @@ def merge_compare(
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
-def classify_vs_many(
+def _classify_vs_many(
     q: jax.Array,            # [m] int32 local (query) logical cells
     peers: jax.Array,        # [N, m] int32 peer slab logical cells
     *,
@@ -225,12 +244,14 @@ def _classify_dict(flags, sums, fp, N):
     }
 
 
-def _one_vs_many_blocks(N: int, m: int, bn, bm, interpret: bool):
+def _one_vs_many_blocks(N: int, m: int, bn, bm, interpret: bool,
+                        use_table: bool = True):
     """Resolve one-vs-many block defaults: explicit args > autotune >
     per-backend defaults.  The sharded wrapper resolves at FULL-N too,
     so both paths always tile the m axis identically."""
     if bn is None or bm is None:
-        cfg = autotune.lookup("one_vs_many", N, N, m, interpret) or {}
+        cfg = (autotune.lookup("one_vs_many", N, N, m, interpret) or {}) \
+            if use_table else {}
         bn = bn or cfg.get("bn", 8 if not interpret else 128)
         bm = bm or cfg.get("bm", 512)
     return bn, bm
@@ -249,7 +270,7 @@ def _one_vs_many_body(q, peers, base, bn, bm, m: int, interpret: bool):
     return flags[:nd], sums[:nd], fp[:nd]
 
 
-def classify_vs_many_packed(
+def _classify_vs_many_packed(
     q: jax.Array,            # [m] int32 local (query) logical cells
     peers: jax.Array,        # [N, m] uint8 residual slab
     base: jax.Array,         # [N] (or [N, 1]) int32 per-slot offsets
@@ -257,21 +278,23 @@ def classify_vs_many_packed(
     bn: int | None = None,
     bm: int | None = None,
     interpret: bool | None = None,
+    use_autotune: bool = True,
 ):
     """One-vs-many classify against a PACKED slab: u8 HBM reads, the
     per-row base is re-applied tile-locally in VMEM.  Same result dict
-    as ``classify_vs_many``."""
+    as ``_classify_vs_many``."""
     if interpret is None:
         interpret = not _on_tpu()
     (m,) = q.shape
     N, mp_ = peers.shape
     assert m == mp_, (q.shape, peers.shape)
-    bn, bm = _one_vs_many_blocks(N, m, bn, bm, interpret)
+    bn, bm = _one_vs_many_blocks(N, m, bn, bm, interpret, use_autotune)
+    _note_dispatch("one_vs_many", "packed", bn=bn, bm=bm)
     flags, sums, fp = _one_vs_many_body(q, peers, base, bn, bm, m, interpret)
     return _classify_dict(flags, sums, fp, N)
 
 
-def classify_vs_many_packed_sharded(
+def _classify_vs_many_packed_sharded(
     q: jax.Array,            # [m] int32 local (query) logical cells
     peers: jax.Array,        # [N, m] uint8 residual slab, row-sharded
     base: jax.Array,         # [N] (or [N, 1]) int32 per-slot offsets
@@ -281,8 +304,9 @@ def classify_vs_many_packed_sharded(
     bn: int | None = None,
     bm: int | None = None,
     interpret: bool | None = None,
+    use_autotune: bool = True,
 ):
-    """``classify_vs_many_packed`` over a row-sharded slab via shard_map.
+    """``_classify_vs_many_packed`` over a row-sharded slab via shard_map.
 
     The query is replicated; every device runs the packed one-vs-many
     Pallas kernel on its own ``[N/d, m]`` row shard — no cross-device
@@ -300,7 +324,9 @@ def classify_vs_many_packed_sharded(
     shards = mesh.shape[axis]
     if N % shards:
         raise ValueError(f"slab rows {N} not divisible by {shards} shards")
-    bn, bm = _one_vs_many_blocks(N, m, bn, bm, interpret)
+    bn, bm = _one_vs_many_blocks(N, m, bn, bm, interpret, use_autotune)
+    _note_dispatch("one_vs_many", "packed_sharded", bn=bn, bm=bm,
+                   shards=shards)
     fn = _sharded_classify_fn(mesh, axis, bn, bm, m, interpret)
     flags, sums, fp = fn(q, peers, jnp.asarray(base, jnp.int32).reshape(-1))
     return _classify_dict(flags, sums, fp, N)
@@ -323,9 +349,9 @@ def _sharded_classify_fn(mesh, axis: str, bn: int, bm: int, m: int,
     ))
 
 
-def overlay_wide_classify(out: dict, q: jax.Array, wide_idx,
-                          wide_rows: jax.Array, *,
-                          interpret: bool | None = None) -> dict:
+def _overlay_wide_classify(out: dict, q: jax.Array, wide_idx,
+                           wide_rows: jax.Array, *,
+                           interpret: bool | None = None) -> dict:
     """Sparse promoted-row overlay for one-vs-many classify results.
 
     ``out`` is a packed-slab result dict whose promoted slots hold
@@ -334,7 +360,7 @@ def overlay_wide_classify(out: dict, q: jax.Array, wide_idx,
     patch them in.  The O(N) bulk stays packed — a single overflowed row
     no longer drops the whole slab compare to the int32 fallback.
     """
-    wout = classify_vs_many(q, wide_rows, interpret=interpret)
+    wout = _classify_vs_many(q, wide_rows, interpret=interpret)
     idx = jnp.asarray(wide_idx, jnp.int32)
     patched = dict(out)
     for key in ("q_le_p", "p_le_q", "sum_p",
@@ -395,9 +421,11 @@ def _matrix_dict(le, ge, row_sums, col_sums, m_true):
     }
 
 
-def _matrix_blocks(engine, N, M, m, bi, bj, bm, interpret):
+def _matrix_blocks(engine, N, M, m, bi, bj, bm, interpret,
+                   use_table: bool = True):
     """Resolve block shapes: explicit args > autotune table > defaults."""
-    cfg = autotune.lookup("matrix", N, M, m, interpret) or {}
+    cfg = (autotune.lookup("matrix", N, M, m, interpret) or {}) \
+        if use_table else {}
     if cfg.get("engine") != engine:
         cfg = {}
     if interpret:
@@ -412,7 +440,7 @@ def _matrix_blocks(engine, N, M, m, bi, bj, bm, interpret):
             bm or cfg.get("bm", dflt[2]))
 
 
-def compare_matrix_packed(
+def _compare_matrix_packed(
     cells: jax.Array,           # [N, m] uint8 residual slab (rows)
     base: jax.Array,            # [N] (or [N, 1]) int32 per-slot offsets
     cols: jax.Array = None,     # [M, m] uint8 column slab; None -> symmetric
@@ -424,12 +452,13 @@ def compare_matrix_packed(
     bm: int | None = None,
     uniform_base: bool | None = None,
     interpret: bool | None = None,
+    use_autotune: bool = True,
 ):
     """Tiled all-pairs compare over packed u8 slab(s).
 
     Symmetric calls (``cols is None``) sweep only the block-upper
     triangle and mirror the rest by transposition.  Returns the same
-    dict as ``compare_matrix``.
+    dict as ``_compare_matrix``.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -439,13 +468,14 @@ def compare_matrix_packed(
     N, m = cells.shape
     M = cols.shape[0]
     if engine == "i32":
-        # the legacy hint selects the int32 kernel in compare_matrix;
+        # the legacy hint selects the int32 kernel in _compare_matrix;
         # a packed slab has no int32 kernel, so resolve to auto (flags
         # are exact under every packed engine) instead of raising —
         # registry.all_pairs(**kw) call sites keep working packed
         engine = None
     if engine is None:
-        cfg = autotune.lookup("matrix", N, M, m, interpret) or {}
+        cfg = (autotune.lookup("matrix", N, M, m, interpret) or {}) \
+            if use_autotune else {}
         engine = cfg.get("engine", "tri")
         if engine == "i32":
             engine = "tri"
@@ -457,7 +487,9 @@ def compare_matrix_packed(
         b = jnp.asarray(base).reshape(-1)
         cb = jnp.asarray(col_base).reshape(-1)
         uniform_base = bool((b == b[0]).all()) and bool((cb == b[0]).all())
-    bi, bj, bm = _matrix_blocks(engine, N, M, m, bi, bj, bm, interpret)
+    bi, bj, bm = _matrix_blocks(engine, N, M, m, bi, bj, bm, interpret,
+                                use_autotune)
+    _note_dispatch("matrix", engine, bi=bi, bj=bj, bm=bm)
 
     row_sums = _packed_row_sums(cells, base, m)
     col_sums = row_sums if symmetric else _packed_row_sums(cols, col_base, m)
@@ -510,7 +542,7 @@ def _full_rect_flags(rows, row_base, cols, col_base, bi, bj, bm,
     return le[:N, :M], ge[:N, :M]
 
 
-def compare_matrix_packed_sharded(
+def _compare_matrix_packed_sharded(
     cells: jax.Array,           # [N, m] uint8 residual slab, row-sharded
     base: jax.Array,            # [N] (or [N, 1]) int32 per-slot offsets
     *,
@@ -522,6 +554,7 @@ def compare_matrix_packed_sharded(
     bm: int | None = None,
     uniform_base: bool | None = None,
     interpret: bool | None = None,
+    use_autotune: bool = True,
 ):
     """Symmetric all-pairs over a row-sharded packed slab: block-row ring.
 
@@ -529,20 +562,21 @@ def compare_matrix_packed_sharded(
     circulates a column shard around the mesh ring with ``ppermute``;
     every ring step compares its resident rows against the visiting
     columns with the packed full-rect engine, filling one ``[N/d, N/d]``
-    block of its ``[N/d, N]`` block-row.  After ``d`` steps the
-    shard_map output concatenates to the full ``[N, N]`` flag matrices.
+    block of its ``[N/d, N]`` block-row.  The sweep is HALVED by
+    symmetry: only ceil(d/2) visiting offsets are computed, and each
+    off-diagonal block ships its transposed flags back across the ring
+    (``le(j, i) == ge(i, j)^T``) to fill the mirror block, so the
+    shard_map output still concatenates to the full ``[N, N]`` flag
+    matrices after 1 + ceil(d/2) kernel steps instead of d.
 
-    Per-device HBM traffic is O(N * m / d) resident + O(N * m) streamed
-    ring tiles; peak per-device memory never materializes the whole
-    slab.  Flags are exact, and the fp / sums finalize runs through the
-    SAME ``_eq3_outer`` / ``_packed_row_sums`` expressions as the
-    unsharded engines over exact integer sums — results are
+    Per-device HBM traffic is O(N * m / d) resident + O(N * m / 2)
+    streamed ring tiles (plus two [N/d, N/d] int8 flag blocks shipped
+    back per halved step); peak per-device memory never materializes
+    the whole slab.  Flags are exact — mirroring by transposition moves
+    bits, it never recomputes them — and the fp / sums finalize runs
+    through the SAME ``_eq3_outer`` / ``_packed_row_sums`` expressions
+    as the unsharded engines over exact integer sums, so results are
     bit-identical for every shard count.
-
-    The ring sweeps every (i, j) block even though ``ge(i, j) ==
-    le(j, i)`` — a deliberate 2x compute trade for d simple identical
-    steps; halving it (ceil(d/2) steps + shipping transposed blocks
-    back) is the ROADMAP "ring on real interconnect" item.
 
     Pass ``uniform_base`` explicitly on hot paths (the registry does,
     from its host-side base copy): the default probes the sharded base
@@ -555,7 +589,7 @@ def compare_matrix_packed_sharded(
     # registry never breaks existing all_pairs(**kw) call sites: "tri"
     # has no per-tile meaning on the ring (tiles are rectangles), "mxu"
     # would need a host-synced global span probe, and "i32" is the
-    # legacy-kernel hint from compare_matrix — all resolve to the
+    # legacy-kernel hint from _compare_matrix — all resolve to the
     # full-rect packed engine, whose flags are exact regardless
     if engine not in (None, "full", "tri", "mxu", "i32"):
         raise ValueError(f"unknown packed engine: {engine}")
@@ -569,7 +603,8 @@ def compare_matrix_packed_sharded(
         uniform_base = bool((b == b[0]).all())
     with_base = not uniform_base
     bi, bj, bm = _matrix_blocks("full", N // d, N // d, m, bi, bj, bm,
-                                interpret)
+                                interpret, use_autotune)
+    _note_dispatch("matrix", "ring_full", bi=bi, bj=bj, bm=bm, shards=d)
     fn = _sharded_ring_fn(mesh, axis, N, bi, bj, bm, m, with_base, interpret)
     le, ge = fn(cells, base)
     row_sums = _packed_row_sums(cells, base, m)
@@ -581,8 +616,20 @@ def compare_matrix_packed_sharded(
 def _sharded_ring_fn(mesh, axis: str, N: int, bi: int, bj: int, bm: int,
                      m: int, with_base: bool, interpret: bool):
     """Jitted shard_map'd block-row ring, cached per (mesh, axis, shape,
-    blocks) so the d-step unrolled ppermute body traces once, not on
-    every all_pairs call."""
+    blocks) so the unrolled ppermute body traces once, not on every
+    all_pairs call.
+
+    Halved sweep: the matrix is symmetric under transposition-with-swap
+    (``le(j, i) == ge(i, j)^T``), so only visiting offsets
+    ``s = 0 .. d//2`` run the kernel.  For ``1 <= s <= (d-1)//2`` the
+    device that computed block ``(i, i+s)`` ships both flag blocks
+    transposed ``s`` hops forward, where they land exactly on the owner
+    of the mirror block ``(i+s, i)``.  The even-d half-way offset
+    ``s = d/2`` is its own mirror across the ring (device ``i+d/2``
+    computes ``(i+d/2, i)`` at the same step), so it needs no ship.
+    Kernel steps drop from ``d`` to ``1 + d//2`` — the deliberate 2x of
+    the original ring is gone.
+    """
     d = mesh.shape[axis]
 
     def ring(cu8, b):
@@ -591,7 +638,11 @@ def _sharded_ring_fn(mesh, axis: str, N: int, bi: int, bj: int, bm: int,
         le_acc = jnp.zeros((nd, N), jnp.int8)
         ge_acc = jnp.zeros((nd, N), jnp.int8)
         cols, cb = cu8, b
-        for s in range(d):
+        shift = [(i, (i - 1) % d) for i in range(d)]
+        for s in range(d // 2 + 1):
+            if s:
+                cols = jax.lax.ppermute(cols, axis, shift)
+                cb = jax.lax.ppermute(cb, axis, shift)
             src = (my + s) % d          # column block visiting this step
             le, ge = _full_rect_flags(cu8, b, cols, cb, bi, bj, bm,
                                       m, with_base, interpret)
@@ -599,10 +650,18 @@ def _sharded_ring_fn(mesh, axis: str, N: int, bi: int, bj: int, bm: int,
                 le_acc, le, (0, src * nd))
             ge_acc = jax.lax.dynamic_update_slice(
                 ge_acc, ge, (0, src * nd))
-            if s < d - 1:
-                perm = [(i, (i - 1) % d) for i in range(d)]
-                cols = jax.lax.ppermute(cols, axis, perm)
-                cb = jax.lax.ppermute(cb, axis, perm)
+            if 1 <= s <= (d - 1) // 2:
+                # mirror block (my+s, my): ship the transposed flags s
+                # hops forward; what arrives here came from my-s and is
+                # this device's block (my, my-s)
+                fwd = [(i, (i + s) % d) for i in range(d)]
+                le_m = jax.lax.ppermute(ge.T, axis, fwd)
+                ge_m = jax.lax.ppermute(le.T, axis, fwd)
+                mirror = (my - s) % d
+                le_acc = jax.lax.dynamic_update_slice(
+                    le_acc, le_m, (0, mirror * nd))
+                ge_acc = jax.lax.dynamic_update_slice(
+                    ge_acc, ge_m, (0, mirror * nd))
         return le_acc, ge_acc
 
     return jax.jit(shard_map(
@@ -645,7 +704,7 @@ def _mxu_finalize(viol, cells, base, cols, col_base,
     return _matrix_dict(le, ge, row_sums, col_sums, m_true)
 
 
-def compare_matrix(
+def _compare_matrix(
     rows: jax.Array,         # [N, m] int32 logical cells
     cols: jax.Array,         # [M, m] int32 logical cells
     *,
@@ -654,6 +713,7 @@ def compare_matrix(
     bj: int | None = None,
     bm: int | None = None,
     interpret: bool | None = None,
+    use_autotune: bool = True,
 ):
     """Tiled all-pairs compare: drop-in for the broadcast reference
     ``repro.core.clock.comparability_matrix`` without the O(n^2 * m)
@@ -677,7 +737,7 @@ def compare_matrix(
 
     if engine is None and isinstance(rows, jax.core.Tracer):
         engine = "i32"      # under an outer jit the span probe can't sync
-    if engine is None:
+    if engine is None and use_autotune:
         # honor a measured "int32 wins here" verdict before paying the probe
         cfg = autotune.lookup("matrix", N, M, m, interpret) or {}
         if cfg.get("engine") == "i32":
@@ -689,18 +749,22 @@ def compare_matrix(
             packed_rows = _shift_pack(rows, lo)
             base = jnp.full((N,), lo, jnp.int32)
             if symmetric:
-                return compare_matrix_packed(
+                return _compare_matrix_packed(
                     packed_rows, base, engine=engine, bi=bi, bj=bj, bm=bm,
-                    uniform_base=True, interpret=interpret)
-            return compare_matrix_packed(
+                    uniform_base=True, interpret=interpret,
+                    use_autotune=use_autotune)
+            return _compare_matrix_packed(
                 packed_rows, base, _shift_pack(cols, lo),
                 jnp.full((M,), lo, jnp.int32), engine=engine,
-                bi=bi, bj=bj, bm=bm, uniform_base=True, interpret=interpret)
+                bi=bi, bj=bj, bm=bm, uniform_base=True, interpret=interpret,
+                use_autotune=use_autotune)
         if engine is not None:
             raise ValueError(
                 f"engine={engine} needs value span <= {U8_MAX}, got {hi - lo}")
 
-    bi, bj, bm = _matrix_blocks("i32", N, M, m, bi, bj, bm, interpret)
+    bi, bj, bm = _matrix_blocks("i32", N, M, m, bi, bj, bm, interpret,
+                                use_autotune)
+    _note_dispatch("matrix", "i32", bi=bi, bj=bj, bm=bm)
     col_sums = jnp.sum(cols, axis=1).astype(jnp.float32)           # [M]
     rows_p, bi_eff, bm_eff = tile2d(rows, bi, bm)
     cols_p, bj_eff, _ = tile2d(cols, bj, bm_eff)
@@ -735,3 +799,39 @@ def _span_probe(rows, cols=None):
         lo = jnp.minimum(lo, jnp.min(cols))
         hi = jnp.maximum(hi, jnp.max(cols))
     return jnp.stack([lo, hi])
+
+
+# ---------------------------------------------------------------------------
+# deprecated pre-front-door entry points
+# ---------------------------------------------------------------------------
+
+def _shim(name: str, impl):
+    """Thin ``DeprecationWarning`` shim: delegates to the SAME
+    implementation the ``repro.causal.CausalEngine`` front-door calls,
+    so shim results are bit-identical to the new API by construction.
+    The warning is attributed to the CALLER's module (stacklevel=2) so
+    CI can gate ``error::DeprecationWarning`` on ``repro.*`` modules,
+    proving no internal caller still uses these."""
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"repro.kernels.ops.{name} is deprecated; use the "
+            "repro.causal.CausalEngine front-door "
+            "(engine.classify / engine.pairs) instead",
+            DeprecationWarning, stacklevel=2)
+        return impl(*args, **kwargs)
+    wrapper.__name__ = wrapper.__qualname__ = name
+    wrapper.__doc__ = ("DEPRECATED — use ``repro.causal.CausalEngine``.\n\n"
+                       + (getattr(impl, "__doc__", None) or ""))
+    return wrapper
+
+
+compare_matrix = _shim("compare_matrix", _compare_matrix)
+compare_matrix_packed = _shim("compare_matrix_packed", _compare_matrix_packed)
+compare_matrix_packed_sharded = _shim(
+    "compare_matrix_packed_sharded", _compare_matrix_packed_sharded)
+classify_vs_many = _shim("classify_vs_many", _classify_vs_many)
+classify_vs_many_packed = _shim(
+    "classify_vs_many_packed", _classify_vs_many_packed)
+classify_vs_many_packed_sharded = _shim(
+    "classify_vs_many_packed_sharded", _classify_vs_many_packed_sharded)
+overlay_wide_classify = _shim("overlay_wide_classify", _overlay_wide_classify)

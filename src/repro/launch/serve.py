@@ -12,6 +12,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.causal import CausalPolicy
 from repro.configs import get_config, get_smoke_config
 from repro.models.params import init_params
 from repro.runtime.clock_runtime import ClockConfig
@@ -36,7 +37,7 @@ def main():
         ServeConfig(max_batch=args.batch,
                     max_seq=args.prompt_len + args.gen + 8,
                     temperature=args.temperature, seed=args.seed),
-        ClockConfig())
+        ClockConfig(policy=CausalPolicy(fp_threshold=1e-4)))
 
     key = jax.random.PRNGKey(args.seed + 1)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)

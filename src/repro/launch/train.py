@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.causal import CausalPolicy
 from repro.configs import get_config, get_smoke_config
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, SyntheticLM
@@ -37,7 +38,10 @@ def build(args):
         pass  # seq comes from data config
     opt_cfg = OptConfig(lr=args.lr, total_steps=args.steps,
                         warmup_steps=max(args.steps // 20, 5))
-    clock_cfg = ClockConfig()
+    # the launch spec names the causality policy explicitly: it is the
+    # one source of truth the runtime threads through its registry,
+    # gossip and checkpoint-lineage gates
+    clock_cfg = ClockConfig(policy=CausalPolicy(fp_threshold=1e-4))
     data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                   global_batch=args.batch, run_id=args.run_id))
     return cfg, opt_cfg, clock_cfg, data

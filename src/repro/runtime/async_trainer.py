@@ -76,9 +76,11 @@ class AsyncCoordinator:
         self.momentum = jax.tree.map(jnp.zeros_like, self.params)
         self.clock = ClockRuntime(c_cfg, run_id=run_id)
         # fleet registry: one slab row per pod clock; all per-round
-        # classification happens in ONE device call against it
+        # classification happens in ONE device call against it, under
+        # the runtime's CausalPolicy (one source of truth for dispatch)
         self.registry = ClockRegistry(
-            capacity=max(16, 4 * a_cfg.n_pods), m=c_cfg.m, k=c_cfg.k)
+            capacity=max(16, 4 * a_cfg.n_pods), m=c_cfg.m, k=c_cfg.k,
+            policy=self.clock.policy)
         self.run_id = run_id
         self.round = 0
         self.log: list = []

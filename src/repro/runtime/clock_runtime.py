@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.causal import CausalEngine, CausalPolicy
 from repro.core import clock as bc
 from repro.core import history as hist
 from repro.core.hashing import stable_event_id
@@ -47,6 +48,15 @@ class ClockConfig:
     fp_threshold: float = 1e-4
     history_window: int = 32
     straggler_gap: float = 64.0  # clock-sum ticks
+    # full causality policy (engine preference, mesh, block shapes, ...);
+    # None derives one from fp_threshold.  When set, its fp_threshold is
+    # the one the runtime gates on — the single source of truth threaded
+    # through registry construction, gossip, serving and checkpoints.
+    policy: Optional[CausalPolicy] = None
+
+    def causal_policy(self) -> CausalPolicy:
+        return (self.policy if self.policy is not None
+                else CausalPolicy(fp_threshold=self.fp_threshold))
 
 
 class LineageStatus:
@@ -58,7 +68,7 @@ class LineageStatus:
 
 @dataclasses.dataclass
 class CheckpointLineage:
-    """One ``classify_vs_many`` call over a whole checkpoint directory.
+    """One ``CausalEngine.classify`` call over a checkpoint directory.
 
     Entries are sorted by step; ``safe`` mirrors ``admit_restore``'s
     decision rule per checkpoint.
@@ -83,6 +93,8 @@ class ClockRuntime:
     def __init__(self, cfg: ClockConfig, run_id: str = "run0"):
         self.cfg = cfg
         self.run_id = run_id
+        self.policy = cfg.causal_policy()
+        self.causal = CausalEngine(self.policy)
         self.clock = bc.zeros(cfg.m, cfg.k)
         self.history = hist.init(cfg.history_window, cfg.m, cfg.k)
 
@@ -138,7 +150,9 @@ class ClockRuntime:
         return registry.classify_all(self.clock)
 
     def make_registry(self, capacity: int, *, mesh=None, axis: str | None = None):
-        """Fleet registry sized to this runtime's clock config.
+        """Fleet registry sized to this runtime's clock config, carrying
+        this runtime's CausalPolicy (one source of truth for fp gates
+        and engine dispatch).
 
         Pass a mesh (``launch.mesh.make_fleet_mesh``) to shard the peer
         slab over devices — classify_fleet then runs the shard_map'ed
@@ -148,7 +162,8 @@ class ClockRuntime:
         from repro.fleet.registry import ClockRegistry
         from repro.sharding import FLEET_AXIS
         return ClockRegistry(capacity, m=self.cfg.m, k=self.cfg.k,
-                             mesh=mesh, axis=FLEET_AXIS if axis is None else axis)
+                             mesh=mesh, axis=FLEET_AXIS if axis is None else axis,
+                             policy=self.policy)
 
     def refined_fp(self, other: bc.BloomClock) -> float:
         """§3 history refinement: fp against the closest dominating stored
@@ -163,12 +178,12 @@ class ClockRuntime:
             return False, status, fp
         if status == LineageStatus.ANCESTOR:
             fp = min(fp, self.refined_fp(ckpt_clock))
-            return fp <= self.cfg.fp_threshold or float(bc.clock_sum(self.clock)) == 0.0, status, fp
+            return fp <= self.policy.fp_threshold or float(bc.clock_sum(self.clock)) == 0.0, status, fp
         return True, status, fp
 
     def classify_checkpoints(self, manager) -> CheckpointLineage:
         """Classify a WHOLE checkpoint directory against the live clock
-        in one ``classify_vs_many`` device call (manifests only — no
+        in one ``causal.classify`` device call (manifests only — no
         state tensors are read).
 
         Replaces the one-``admit_restore``-per-checkpoint loop: one
@@ -185,23 +200,22 @@ class ClockRuntime:
         clocks = [self.clock_from_snapshot(man["clock"]) for _, man in entries]
         stacked = jnp.stack(
             [c.logical_cells().astype(jnp.int32) for c in clocks])
-        out = ops.classify_vs_many(
-            self.clock.logical_cells().astype(jnp.int32), stacked)
-        h = jax.device_get(out)
-        p_le_q, q_le_p = h["p_le_q"], h["q_le_p"]
+        res = jax.device_get(self.causal.classify(self.clock, stacked))
+        p_le_q, q_le_p = res.after(), res.before()
+        thr = self.policy.fp_threshold
         live_empty = float(bc.clock_sum(self.clock)) == 0.0
         status, fp, safe = [], [], []
         for i in range(len(entries)):
             if p_le_q[i] and q_le_p[i]:
                 st, f, ok = LineageStatus.SAME, 0.0, True
             elif p_le_q[i]:
-                st, f = LineageStatus.ANCESTOR, float(h["fp_p_before_q"][i])
-                if f > self.cfg.fp_threshold and not live_empty:
+                st, f = LineageStatus.ANCESTOR, float(res.fp_p_before_q[i])
+                if f > thr and not live_empty:
                     f = min(f, self.refined_fp(clocks[i]))
-                ok = f <= self.cfg.fp_threshold or live_empty
+                ok = f <= thr or live_empty
             elif q_le_p[i]:
                 st, f, ok = (LineageStatus.DESCENDANT,
-                             float(h["fp_q_before_p"][i]), True)
+                             float(res.fp_q_before_p[i]), True)
             else:
                 st, f, ok = LineageStatus.FORKED, 0.0, False
             status.append(st)
@@ -226,7 +240,7 @@ class ClockRuntime:
         decision — the accept path costs no extra device work.
         """
         status, fp, merged = self._classify(peer_clock)
-        ok = status != LineageStatus.FORKED and fp <= self.cfg.fp_threshold
+        ok = status != LineageStatus.FORKED and fp <= self.policy.fp_threshold
         if ok:
             self.clock = bc.compress(bc.BloomClock(
                 cells=jnp.asarray(merged, jnp.int32),

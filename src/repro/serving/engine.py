@@ -26,7 +26,6 @@ import numpy as np
 
 from repro.core import clock as bc
 from repro.fleet.registry import ClockRegistry
-from repro.kernels import ops
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.runtime.clock_runtime import ClockConfig, ClockRuntime
@@ -61,7 +60,8 @@ class ServingEngine:
         # (FIFO) so a long-running engine never crashes on admission;
         # callers can release() finished sessions to free slots early.
         self.sessions = ClockRegistry(
-            capacity=max(16, 8 * s_cfg.max_batch), m=c_cfg.m, k=c_cfg.k)
+            capacity=max(16, 8 * s_cfg.max_batch), m=c_cfg.m, k=c_cfg.k,
+            policy=self.clock.policy)
         self._session_order: list = []
         self._session_seq = 0
 
@@ -133,7 +133,8 @@ class ServingEngine:
     def can_adopt(self, session: dict) -> tuple[bool, str, float]:
         """Clock-gated session migration (see module docstring)."""
         status, fp = self.clock.lineage(session["clock"].clock)
-        ok = status in ("ancestor", "same") and fp <= self.clock.cfg.fp_threshold
+        ok = (status in ("ancestor", "same")
+              and fp <= self.clock.policy.fp_threshold)
         return ok, status, fp
 
     def adopt(self, session: dict) -> bool:
@@ -148,8 +149,8 @@ class ServingEngine:
 
     def adopt_many(self, sessions: list) -> np.ndarray:
         """Clock-gated BULK migration: classify every incoming session
-        against the replica clock with ONE fused one-vs-many kernel
-        call, adopt the safe ones, merge their clocks in one reduction.
+        against the replica clock with ONE ``causal.classify`` call,
+        adopt the safe ones, merge their clocks in one reduction.
 
         Returns the bool accept mask (aligned with ``sessions``).
         """
@@ -158,14 +159,11 @@ class ServingEngine:
         cells = jnp.stack([
             s["clock"].clock.logical_cells().astype(jnp.int32)
             for s in sessions])
-        out = ops.classify_vs_many(
-            self.clock.clock.logical_cells().astype(jnp.int32), cells)
-        h = jax.device_get(out)
-        equal = h["p_le_q"] & h["q_le_p"]
-        fp = np.where(equal, 0.0, h["fp_p_before_q"])
+        res = jax.device_get(self.clock.causal.classify(
+            self.clock.clock, cells))
         # session ≼ replica (its KV snapshot is from our causal past)
         # with Eq.-3 confidence — same rule as can_adopt, batched
-        ok = h["p_le_q"] & (fp <= self.clock.cfg.fp_threshold)
+        ok = res.after() & (res.fp_after() <= self.clock.policy.fp_threshold)
         if ok.any():
             merged = jnp.maximum(
                 self.clock.clock.logical_cells(),

@@ -41,19 +41,19 @@ class TestCompare:
     def test_self_after_tick_is_ordered(self):
         c0 = bc.tick(bc.zeros(64, k=3), *_ev(1))
         c1 = bc.tick(c0, *_ev(2))
-        o = bc.compare(c0, c1)
+        o = bc.ordering(c0, c1)
         assert bool(o.a_le_b) and not bool(o.b_le_a) and not bool(o.concurrent)
 
     def test_merge_dominates_both(self):
         a = bc.tick(bc.zeros(64, k=3), *_ev(1))
         b = bc.tick(bc.zeros(64, k=3), *_ev(2))
         m = bc.merge(a, b)
-        assert bool(bc.compare(a, m).a_le_b)
-        assert bool(bc.compare(b, m).a_le_b)
+        assert bool(bc.ordering(a, m).a_le_b)
+        assert bool(bc.ordering(b, m).a_le_b)
 
     def test_equal(self):
         a = bc.tick(bc.zeros(64, k=3), *_ev(9))
-        o = bc.compare(a, a)
+        o = bc.ordering(a, a)
         assert bool(o.equal) and bool(o.a_le_b) and bool(o.b_le_a)
 
 
@@ -165,7 +165,7 @@ class TestHistory:
             h = hist.push(h, c)
             snapshots.append(c)
         other = snapshots[2]  # an old timestamp another node holds
-        fp_newest = float(bc.compare(other, c).fp_a_before_b)
+        fp_newest = float(bc.ordering(other, c).fp_a_before_b)
         fp_best, idx = hist.best_predecessor_fp(h, other)
         assert float(fp_best) <= fp_newest
         assert float(fp_best) < 1.0

@@ -22,7 +22,8 @@ from repro.fleet import (
     fleet_health,
     gossip_round,
 )
-from repro.kernels import ops
+from repro import causal
+from repro.kernels import ops  # noqa: F401 (impl spies elsewhere)
 
 RNG = np.random.default_rng(7)
 
@@ -60,7 +61,7 @@ def test_compare_matrix_matches_broadcast_reference(n, m):
         cells = cells.at[2].set(cells[0] + 1)
     clocks = bc.BloomClock(cells, jnp.zeros((n,), jnp.int32), 3)
     ref = bc.comparability_matrix(clocks)
-    got = ops.compare_matrix(cells, cells)
+    got = causal.CausalEngine().pairs(cells)
     np.testing.assert_array_equal(np.asarray(got["a_le_b"]),
                                   np.asarray(ref["a_le_b"]))
     np.testing.assert_array_equal(np.asarray(got["concurrent"]),
@@ -76,10 +77,10 @@ def test_classify_vs_many_matches_pairwise(n, m):
     cells = _cells(n, m)
     cells = cells.at[1].set(cells[0])
     q = cells[0]
-    got = ops.classify_vs_many(q, cells)
+    got = causal.CausalEngine().classify(q, cells)
     clocks = bc.BloomClock(cells, jnp.zeros((n,), jnp.int32), 3)
     qc = bc.BloomClock(q, jnp.zeros((), jnp.int32), 3)
-    o = bc.compare(qc, clocks)     # broadcast pairwise reference
+    o = bc.ordering(qc, clocks)     # broadcast pairwise reference
     np.testing.assert_array_equal(np.asarray(got["q_le_p"]), np.asarray(o.a_le_b))
     np.testing.assert_array_equal(np.asarray(got["p_le_q"]), np.asarray(o.b_le_a))
     np.testing.assert_allclose(np.asarray(got["fp_q_before_p"]),
@@ -94,7 +95,7 @@ def test_matrix_kernel_multi_tile_accumulation():
     n, m = 9, 1000     # pads to 1024 cells, 16 rows
     a = jnp.zeros((n, m), jnp.int32)
     a = a.at[0, m - 1].set(5)              # row 0 beats everyone, last tile
-    got = ops.compare_matrix(a, a)
+    got = causal.CausalEngine().pairs(a)
     le = np.asarray(got["a_le_b"])
     assert not le[0, 1] and le[1, 0]       # 0 !<= 1 but 1 <= 0
     assert float(np.asarray(got["row_sums"])[0]) == 5.0
@@ -163,9 +164,9 @@ def test_registry_union_dominates_members():
     reg, local = _seeded_registry()
     mask = np.asarray(reg.alive).copy()
     merged = reg.union(mask, local)
-    assert bool(bc.compare(local, merged).a_le_b)
+    assert bool(bc.ordering(local, merged).a_le_b)
     for pid in reg.peer_ids():
-        assert bool(bc.compare(reg.get(pid), merged).a_le_b)
+        assert bool(bc.ordering(reg.get(pid), merged).a_le_b)
 
 
 # ---------------------------------------------------------------------------
@@ -178,8 +179,8 @@ def test_gossip_round_policy():
     assert report.quarantined[reg.slot_of("fork")]
     assert report.n_accepted == 3
     # merged absorbed the descendant's extra events
-    assert bool(bc.compare(reg.get("desc"), merged).a_le_b)
-    assert bool(bc.compare(local, merged).a_le_b)
+    assert bool(bc.ordering(reg.get("desc"), merged).a_le_b)
+    assert bool(bc.ordering(local, merged).a_le_b)
     # push-back: accepted rows now equal the union
     view = reg.classify_all(merged)
     for pid in ("anc", "same", "desc"):

@@ -305,16 +305,16 @@ class TestSimulatorVsPaper:
         for n in "AE":        # C, D missed
             recv(n, t2)
         # A,B,E identical so far; D only saw t1; C nothing
-        assert bool(bc.compare(clocks["A"], clocks["E"]).equal)
-        assert bool(bc.compare(clocks["D"], clocks["A"]).a_le_b)
+        assert bool(bc.ordering(clocks["A"], clocks["E"]).equal)
+        assert bool(bc.ordering(clocks["D"], clocks["A"]).a_le_b)
         t3 = ev("D", 3)       # D advances independently of t2
-        o = bc.compare(clocks["D"], clocks["E"])
+        o = bc.ordering(clocks["D"], clocks["E"])
         # D(t1+t3) vs E(t1+t2): concurrent — exactly the paper's first
         # incomparable pair
         assert bool(o.concurrent)
         recv("E", t3)         # E merges -> dominates everyone now
         for n in "ABCD":
-            assert bool(bc.compare(clocks[n], clocks["E"]).a_le_b)
+            assert bool(bc.ordering(clocks[n], clocks["E"]).a_le_b)
 
     def test_eq3_against_monte_carlo_band(self):
         """Eq. 3 is a (conservative) approximation: MC-true overlap must not

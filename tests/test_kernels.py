@@ -88,7 +88,7 @@ def test_merge_compare_consistent_with_core_clock():
     for i in range(5):
         b = bc.tick(b, jnp.uint32(0), jnp.uint32(100 + i))
     got = ops.merge_compare(a.cells[None], b.cells[None])
-    o = bc.compare(a, b)
+    o = bc.ordering(a, b)
     assert bool(got["a_le_b"][0]) == bool(o.a_le_b)
     np.testing.assert_allclose(float(got["fp_a_before_b"][0]),
                                float(o.fp_a_before_b), rtol=1e-5)

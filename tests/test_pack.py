@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import causal
 from repro.core import clock as bc
 from repro.fleet import ANCESTOR, DEAD, SAME, ClockRegistry, gossip_round
 from repro.kernels import autotune, ops, pack
@@ -106,7 +107,8 @@ def test_packed_engines_match_reference(engine, n, m):
     assert bool(ok.all())
     ref = bc.comparability_matrix(
         bc.BloomClock(logical, jnp.zeros((n,), jnp.int32), 3))
-    got = ops.compare_matrix_packed(u8, pb, engine=engine)
+    got = causal.CausalEngine().pairs(
+        causal.PackedSlab(u8, pb), engine=engine)
     np.testing.assert_array_equal(np.asarray(got["a_le_b"]),
                                   np.asarray(ref["a_le_b"]))
     np.testing.assert_array_equal(np.asarray(got["b_le_a"]),
@@ -126,7 +128,7 @@ def test_packed_rect_engine_matches_reference():
     b = b.at[0].set(a[0])
     au8, ab, _ = pack.pack_rows(a)
     bu8, bb, _ = pack.pack_rows(b)
-    got = ops.compare_matrix_packed(au8, ab, bu8, bb)
+    got = ops._compare_matrix_packed(au8, ab, bu8, bb)
     le = jnp.all(a[:, None, :] <= b[None, :, :], axis=2)
     ge = jnp.all(a[:, None, :] >= b[None, :, :], axis=2)
     np.testing.assert_array_equal(np.asarray(got["a_le_b"]), np.asarray(le))
@@ -139,7 +141,7 @@ def test_multi_tile_accumulation_packed():
     n, m = 9, 1000
     a = jnp.zeros((n, m), jnp.int32)
     a = a.at[0, m - 1].set(5)
-    got = ops.compare_matrix(a, a)            # auto -> packed triangle
+    got = causal.CausalEngine().pairs(a)      # auto -> packed triangle
     le = np.asarray(got["a_le_b"])
     assert not le[0, 1] and le[1, 0]
     assert float(np.asarray(got["row_sums"])[0]) == 5.0
@@ -152,7 +154,7 @@ def test_compare_matrix_wide_span_falls_back():
     c = c.at[0, 0].set(100000)
     ref = bc.comparability_matrix(
         bc.BloomClock(c, jnp.zeros((n,), jnp.int32), 3))
-    got = ops.compare_matrix(c, c)
+    got = causal.CausalEngine().pairs(c)
     np.testing.assert_array_equal(np.asarray(got["a_le_b"]),
                                   np.asarray(ref["a_le_b"]))
 
@@ -316,17 +318,20 @@ def _one_wide_registry(cap=8, m=128, k=3):
 def test_sparse_promoted_classify_dispatch(monkeypatch):
     """Regression pin: with ONE promoted row, classify_all keeps the
     O(N) bulk on the packed kernel and runs the int32 kernel on just the
-    [1, m] promoted handful — never on the whole materialized slab."""
+    [1, m] promoted handful — never on the whole materialized slab.
+
+    Spies on the INTERNAL impls the CausalEngine front-door dispatches
+    to (the public ``ops.*`` names are deprecation shims now)."""
     reg = _one_wide_registry()
     calls = {"packed": [], "i32": []}
-    orig_packed = ops.classify_vs_many_packed
-    orig_i32 = ops.classify_vs_many
+    orig_packed = ops._classify_vs_many_packed
+    orig_i32 = ops._classify_vs_many
     monkeypatch.setattr(
-        ops, "classify_vs_many_packed",
+        ops, "_classify_vs_many_packed",
         lambda q, p, b, **kw: calls["packed"].append(p.shape)
         or orig_packed(q, p, b, **kw))
     monkeypatch.setattr(
-        ops, "classify_vs_many",
+        ops, "_classify_vs_many",
         lambda q, p, **kw: calls["i32"].append(p.shape)
         or orig_i32(q, p, **kw))
     local = reg.get("p0")
@@ -344,14 +349,14 @@ def test_sparse_promoted_all_pairs_dispatch(monkeypatch):
     engine over the packed rows and the int32 rim over [1, m] x alive."""
     reg = _one_wide_registry()
     calls = {"packed": [], "i32": []}
-    orig_packed = ops.compare_matrix_packed
-    orig_i32 = ops.compare_matrix
+    orig_packed = ops._compare_matrix_packed
+    orig_i32 = ops._compare_matrix
     monkeypatch.setattr(
-        ops, "compare_matrix_packed",
+        ops, "_compare_matrix_packed",
         lambda c, b, *a, **kw: calls["packed"].append(c.shape)
         or orig_packed(c, b, *a, **kw))
     monkeypatch.setattr(
-        ops, "compare_matrix",
+        ops, "_compare_matrix",
         lambda r, c, **kw: calls["i32"].append((r.shape, c.shape))
         or orig_i32(r, c, **kw))
     mats = {kk: np.asarray(v) for kk, v in reg.all_pairs().items()}
@@ -388,8 +393,8 @@ def test_autotune_table_miss_falls_back(tmp_path, monkeypatch):
     assert autotune.load_table() == {}
     assert autotune.lookup("matrix", 16, 16, 128, True) is None
     c = _cells(16, 128, hi=9)
-    got1 = ops.compare_matrix(c, c)
-    got2 = ops.compare_matrix(c, c)
+    got1 = causal.CausalEngine().pairs(c)
+    got2 = causal.CausalEngine().pairs(c)
     ref = bc.comparability_matrix(
         bc.BloomClock(c, jnp.zeros((16,), jnp.int32), 3))
     np.testing.assert_array_equal(np.asarray(got1["a_le_b"]),
@@ -408,7 +413,7 @@ def test_autotune_corrupted_cache_file(tmp_path, monkeypatch):
     assert autotune.load_table() == {}
     assert autotune.lookup("matrix", 16, 16, 128, True) is None
     c = _cells(12, 128, hi=9)
-    got = ops.compare_matrix(c, c)
+    got = causal.CausalEngine().pairs(c)
     ref = bc.comparability_matrix(
         bc.BloomClock(c, jnp.zeros((12,), jnp.int32), 3))
     np.testing.assert_array_equal(np.asarray(got["a_le_b"]),

@@ -38,7 +38,7 @@ def test_no_false_negatives_prefix(m, k, events, extra):
     """A clock is always ≼ any of its causal descendants."""
     a = _tick_seq(bc.zeros(m, k), events)
     b = _tick_seq(a, extra)
-    o = bc.compare(a, b)
+    o = bc.ordering(a, b)
     assert bool(o.a_le_b)
     assert not bool(o.concurrent)
 
@@ -55,8 +55,8 @@ def test_merge_is_lub(m, k, ev_a, ev_b):
     a = _tick_seq(bc.zeros(m, k), ev_a)
     b = _tick_seq(bc.zeros(m, k), ev_b)
     mg = bc.merge(a, b)
-    assert bool(bc.compare(a, mg).a_le_b)
-    assert bool(bc.compare(b, mg).a_le_b)
+    assert bool(bc.ordering(a, mg).a_le_b)
+    assert bool(bc.ordering(b, mg).a_le_b)
     lub = jnp.maximum(a.logical_cells(), b.logical_cells())
     assert bool(jnp.all(mg.logical_cells() == lub))
 
@@ -137,7 +137,7 @@ def test_registry_classify_matches_pairwise_compare(peer_events, local_events):
         np.asarray(reg.sums), np.asarray(jnp.sum(reg.cells, axis=1)))
     view = reg.classify_all(local)
     for i in range(len(peer_events)):
-        o = bc.compare(reg.get(i), local)
+        o = bc.ordering(reg.get(i), local)
         want = (SAME if bool(o.equal) else
                 ANCESTOR if bool(o.a_le_b) else
                 DESCENDANT if bool(o.b_le_a) else FORKED)
@@ -165,11 +165,11 @@ def test_gossip_merge_is_fleet_lub(peer_events, local_events):
     reg.admit_many(peers)
     merged, report = gossip_round(
         reg, local, GossipConfig(fp_threshold=1.0, push_back=False))
-    assert bool(bc.compare(local, merged).a_le_b)
+    assert bool(bc.ordering(local, merged).a_le_b)
     lub = local.logical_cells()
     for i, p in peers.items():
         if report.accepted[reg.slot_of(i)]:
-            assert bool(bc.compare(p, merged).a_le_b)
+            assert bool(bc.ordering(p, merged).a_le_b)
             lub = jnp.maximum(lub, p.logical_cells())
     # merged == lub(local, accepted): nothing extra leaked in
     assert bool(jnp.all(merged.logical_cells() == lub))
