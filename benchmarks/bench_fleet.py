@@ -82,7 +82,8 @@ def _last_engine() -> str | None:
 def _rec(records: list, op: str, shape: str, seconds: float,
          reference: str | None = None, speedup: float | None = None,
          shards: int = 1, policy: str | None = None,
-         engine: str | None = None) -> None:
+         engine: str | None = None, transport: str | None = None,
+         report=None) -> None:
     records.append({
         "op": op,
         "shape": shape,
@@ -92,6 +93,12 @@ def _rec(records: list, op: str, shape: str, seconds: float,
         "reference": reference,
         "policy": policy,
         "engine": engine,
+        # gossip fabric + MEASURED per-round frame bytes (None for
+        # non-session ops); reports measure len() of what actually moved
+        "transport": transport,
+        "digest_bytes": None if report is None else report.digest_bytes,
+        "delta_bytes": None if report is None else report.delta_bytes,
+        "pushback_bytes": None if report is None else report.pushback_bytes,
     })
 
 
@@ -268,6 +275,100 @@ def bench_gossip(n: int = 1024, m: int = 1024,
     return rows
 
 
+def bench_transports(n: int, m: int, transports: list,
+                     records: list | None = None, shards: int = 2) -> list:
+    """Anti-entropy sessions per transport: steady-state rounds/s plus
+    the MEASURED digest/delta/push-back frame bytes of one round.
+
+    Socket sessions run against ``min(n, 64)`` real threaded TCP peer
+    servers (one per peer) and include the full frame encode/decode +
+    syscall cost; mesh sessions need ``shards`` devices and an
+    ``n % shards == 0`` slab.  The loopback row is the baseline the
+    other fabrics are compared against byte-for-byte.
+    """
+    from repro.fleet.transport import (LoopbackTransport,
+                                       MeshCollectiveTransport,
+                                       SocketTransport, ClockNode,
+                                       ClockPeerServer)
+    from repro.fleet.transport.session import anti_entropy_session
+
+    records = records if records is not None else []
+    rows = []
+    # accept-everything policy (fp gate open, straggler skip off — same
+    # as the sim audit config) so the timed session really does merge
+    # and push back to ALL n_eff peers, not a draw-dependent subset
+    cfg = GossipConfig(policy=CausalPolicy(fp_threshold=1.0),
+                       straggler_gap=np.inf)
+
+    for tname in transports:
+        servers = []
+        try:
+            if tname == "mesh":
+                from repro.launch.mesh import make_fleet_mesh
+                if shards > len(jax.devices()) or n % shards:
+                    rows.append((f"session_mesh_skip_n{n}_m{m}", 0.0,
+                                 f"need {shards} devices dividing n"))
+                    _rec(records, "gossip_session", f"n{n}_m{m}", 0.0,
+                         reference=f"skipped_need_{shards}_devices",
+                         shards=shards, transport="mesh")
+                    continue
+                mesh = make_fleet_mesh(shards)
+            else:
+                mesh = None
+            # one TCP server per peer, so cap the socket fleet
+            n_eff = min(n, 64) if tname == "socket" else n
+            # ONE draw feeds every fabric's peer state AND the local
+            # clock below — the fabrics stay comparable and the
+            # dominance construction can't silently drift apart
+            peer_cells = np.asarray(_rand_cells(n_eff, m))
+
+            if tname == "socket":
+                addresses = {}
+                for i in range(n_eff):
+                    node = ClockNode(f"peer{i}", m, 4)
+                    node.set_cells(peer_cells[i])
+                    server = ClockPeerServer(node).start()
+                    servers.append(server)
+                    addresses[f"peer{i}"] = server.address
+                registry = ClockRegistry(capacity=n_eff, m=m, k=4)
+                tp = SocketTransport(addresses)
+            else:
+                registry = ClockRegistry(capacity=n_eff, m=m, k=4,
+                                         mesh=mesh)
+                registry.admit_many({
+                    f"peer{i}": bc.BloomClock(jnp.asarray(peer_cells[i]),
+                                              jnp.zeros((), jnp.int32), 4)
+                    for i in range(n_eff)})
+                tp = (LoopbackTransport(registry) if mesh is None
+                      else MeshCollectiveTransport(registry))
+
+            # local dominates every peer (cell-wise max + 1), so all n_eff
+            # peers are ANCESTORs and accepted: the timed session runs
+            # the FULL protocol — digest, classify, union, push-back
+            local = bc.BloomClock(jnp.asarray(peer_cells.max(axis=0) + 1),
+                                  jnp.zeros((), jnp.int32), 4)
+            shape = f"n{n_eff}_m{m}"
+            # first session pays the delta ingest (socket) / compile
+            _, first = anti_entropy_session(registry, local, tp, cfg)
+            t = _time(lambda: anti_entropy_session(registry, local, tp,
+                                                   cfg)[1].n_accepted)
+            _, steady = anti_entropy_session(registry, local, tp, cfg)
+            rows.append((
+                f"session_{tname}_{shape}", t * 1e6,
+                f"{1.0 / t:.2f} rounds/s; measured wire/round "
+                f"digest={steady.digest_bytes}B delta={steady.delta_bytes}B "
+                f"push={steady.pushback_bytes}B "
+                f"(first-round delta={first.delta_bytes}B)"))
+            _rec(records, "gossip_session", shape, t,
+                 reference="session_loopback",
+                 shards=registry.n_shards, policy=cfg.policy.label(),
+                 engine=_last_engine(), transport=tname, report=steady)
+        finally:
+            for server in servers:
+                server.stop()
+    return rows
+
+
 def all_benches() -> list:
     """Smaller sweep for benchmarks/run.py (the full acceptance config
     runs via ``python -m benchmarks.bench_fleet``)."""
@@ -285,6 +386,10 @@ def main(argv=None) -> None:
     p.add_argument("--shards", type=int, default=1,
                    help="also bench the mesh-sharded registry over this many "
                         "devices (shard_map classify_all + ppermute all_pairs)")
+    p.add_argument("--transport", default=None,
+                   choices=["loopback", "mesh", "socket", "all"],
+                   help="also bench anti-entropy sessions over this gossip "
+                        "fabric (measured wire bytes land in the JSON)")
     p.add_argument("--json", default="BENCH_fleet.json",
                    help="machine-readable output path")
     args = p.parse_args(argv)
@@ -295,6 +400,12 @@ def main(argv=None) -> None:
             + bench_gossip(n=n, m=m, records=records))
     if args.shards > 1:
         rows += bench_sharded(n=n, m=m, shards=args.shards, records=records)
+    if args.transport:
+        names = (["loopback", "mesh", "socket"] if args.transport == "all"
+                 else [args.transport])
+        rows += bench_transports(n=n, m=m, transports=names,
+                                 records=records,
+                                 shards=max(args.shards, 2))
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f'{name},{us:.2f},"{derived}"')

@@ -5,8 +5,9 @@
 - ``hashing``      event-id mixing + double-hashed bloom indices
 - ``history``      §3 moving-window predecessor refinement
 - ``sim``          N-node protocol simulator with ground-truth scoring
+- ``wire``         binary frame/digest encoding for gossip transports
 """
-from repro.core import clock, hashing, history, sim, vector_clock  # noqa: F401
+from repro.core import clock, hashing, history, sim, vector_clock, wire  # noqa: F401
 from repro.core.clock import (  # noqa: F401
     BloomClock,
     compare,

@@ -251,8 +251,16 @@ def to_wire(c: BloomClock) -> dict:
     return {"cells": cells, "base": int(cc.base), "k": cc.k}
 
 
-def from_wire(snap: dict) -> BloomClock:
-    """Rebuild a clock from a ``to_wire`` dict (either cell dtype)."""
+def from_wire(snap) -> BloomClock:
+    """Rebuild a clock from a ``to_wire`` dict (either cell dtype) or an
+    encoded binary frame (``core.wire.encode_clock`` bytes, as shipped
+    by the socket gossip transport).  Byte input is validated first —
+    truncated / corrupted / unknown-version frames raise
+    ``core.wire.WireFormatError`` instead of yielding a garbage clock.
+    """
+    if isinstance(snap, (bytes, bytearray, memoryview)):
+        from repro.core import wire
+        snap = wire.decode_clock(snap)
     return BloomClock(
         cells=jnp.asarray(snap["cells"], jnp.int32),
         base=jnp.asarray(int(snap["base"]), jnp.int32),

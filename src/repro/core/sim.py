@@ -193,6 +193,14 @@ class GossipSimResult:
     within_eq3_band: bool     # measured consistent with predicted (monitor.fp_within_band)
     merges: int               # peers actually merged across rounds
     quarantines: int          # FORKED verdicts (all truth-concurrent when fn == 0)
+    transport: str = "loopback"   # fabric the audited sessions ran over
+    digest_bytes: int = 0     # MEASURED inbound digest bytes across rounds
+    delta_bytes: int = 0      # MEASURED inbound delta-frame bytes
+    pushback_bytes: int = 0   # MEASURED outbound push-back frame bytes
+
+    @property
+    def wire_bytes(self) -> int:
+        return self.digest_bytes + self.delta_bytes + self.pushback_bytes
 
     def summary(self) -> str:
         return (
@@ -201,19 +209,22 @@ class GossipSimResult:
             f"measured_fp={self.measured_fp_rate:.4f} "
             f"predicted_fp={self.mean_predicted_fp:.4f} "
             f"band_ok={self.within_eq3_band} merges={self.merges} "
-            f"quarantines={self.quarantines}"
+            f"quarantines={self.quarantines} "
+            f"wire={self.wire_bytes}B[{self.transport}]"
         )
 
 
 def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
-                   gossip_cfg=None, registry_factory=None) -> GossipSimResult:
+                   gossip_cfg=None, registry_factory=None,
+                   transport: str = "loopback") -> GossipSimResult:
     """Replay a random execution and interleave REAL fleet gossip rounds,
     scoring every verdict against the exact vector-clock truth.
 
     Between bursts of ordinary protocol events (same generator as
-    ``run_sim``), the observer node runs ``fleet.gossip_round`` over a
-    ``ClockRegistry`` holding every other node's current clock.  Each
-    round's classification is audited:
+    ``run_sim``), the observer node runs one
+    ``fleet.transport.anti_entropy_session`` over a ``ClockRegistry``
+    holding its view of every other node's clock.  Each round's
+    classification is audited:
 
     - a FORKED verdict for a truth-ordered peer is a false negative —
       the paper's §3 guarantee says this can NEVER happen;
@@ -227,11 +238,21 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
     observer's registry construction — the sharded-fleet harness passes
     a mesh-backed factory so every audited verdict also exercises the
     shard_map kernel paths.
+
+    ``transport`` picks the fabric the audited sessions run over:
+    ``"loopback"`` (peer rows admitted into the slab directly),
+    ``"mesh"`` (``MeshCollectiveTransport`` over the factory's sharded
+    registry — digest ring on device), or ``"socket"``, which serves
+    every peer's clock from a real threaded TCP ``ClockPeerServer`` and
+    syncs the observer's registry purely through the digest/delta/§4
+    wire-frame path.  All reported wire bytes are measured frame
+    lengths.  The verdict audit is identical for every fabric.
     """
     from repro.causal import CausalPolicy
     from repro.fleet import gossip as fg
     from repro.fleet import monitor as fm
     from repro.fleet import registry as fr
+    from repro.fleet import transport as ft
 
     if gossip_cfg is None:
         # accept-everything-comparable audit policy, threaded as a
@@ -251,62 +272,101 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
     registry = registry_factory(max(8, n), m, k)
     peers = [p for p in range(n) if p != observer]
 
+    nodes: dict = {}
+    servers: list = []
+    if callable(transport):
+        tp = transport(registry)
+    elif transport == "loopback":
+        tp = ft.LoopbackTransport(registry)
+    elif transport == "mesh":
+        tp = ft.MeshCollectiveTransport(registry)
+    elif transport == "socket":
+        for p in peers:
+            node = ft.ClockNode(f"n{p}", m, k)
+            server = ft.ClockPeerServer(node).start()
+            nodes[p] = node
+            servers.append(server)
+        tp = ft.SocketTransport(
+            {f"n{p}": s.address for p, s in zip(peers, servers)})
+    else:
+        raise ValueError(f"unknown transport {transport!r}")
+    # registry key each sim peer is tracked under (socket peers arrive
+    # from the wire under their node ids)
+    pid_of = {p: (f"n{p}" if p in nodes else p) for p in peers}
+
     def as_clock(cells_row: np.ndarray) -> bc.BloomClock:
         return bc.BloomClock(
             cells=jnp.asarray(cells_row, jnp.int32),
             base=jnp.zeros((), jnp.int32), k=k)
 
     fn = fp_count = claims = merges = quarantines = 0
+    digest_bytes = delta_bytes = pushback_bytes = 0
     predicted: list[float] = []
     round_marks = set(
         np.linspace(cfg.n_events // max(n_rounds, 1), cfg.n_events - 1,
                     n_rounds, dtype=int).tolist())
     rounds_done = 0
 
-    for t, _src, bloom, vec in _replay(cfg, rng, idx):
-        if t not in round_marks:
-            continue
-
-        # ---- one audited gossip round at the observer ----
-        rounds_done += 1
-        registry.admit_many({p: as_clock(bloom[p]) for p in peers})
-        local = as_clock(bloom[observer])
-        merged, report = fg.gossip_round(registry, local, fg_cfg)
-
-        vo = vec[observer]
-        for p in peers:
-            s = registry.slot_of(p)
-            code = int(report.view.status[s])
-            p_le_o = bool(np.all(vec[p] <= vo))
-            o_le_p = bool(np.all(vo <= vec[p]))
-            if code == fr.FORKED:
-                quarantines += 1
-                if p_le_o or o_le_p:
-                    fn += 1          # §3 violation: can never happen
+    try:
+        for t, _src, bloom, vec in _replay(cfg, rng, idx):
+            if t not in round_marks:
                 continue
-            claims += 1
-            predicted.append(float(report.view.fp[s]))
-            truth_ok = {
-                fr.ANCESTOR: p_le_o,
-                fr.SAME: p_le_o and o_le_p,
-                fr.DESCENDANT: o_le_p,
-            }[code]
-            if not truth_ok:
-                fp_count += 1
 
-        # commit the round to BOTH clock families (receive rule)
-        accept_ids = [p for p in peers if report.accepted[registry.slot_of(p)]]
-        merges += len(accept_ids)
-        if accept_ids:
-            union_vec = vo.copy()
-            for p in accept_ids:
-                np.maximum(union_vec, vec[p], out=union_vec)
-            bloom[observer] = np.asarray(merged.logical_cells(), np.int64)
-            vec[observer] = union_vec
-            if fg_cfg.push_back:
+            # ---- one audited gossip round at the observer ----
+            rounds_done += 1
+            if tp.authoritative:
+                registry.admit_many({p: as_clock(bloom[p]) for p in peers})
+            else:
+                # peers publish their CURRENT clock on their own server;
+                # the observer's registry syncs via digest/delta frames
+                for p in peers:
+                    nodes[p].set_cells(bloom[p])
+            local = as_clock(bloom[observer])
+            merged, report = ft.anti_entropy_session(
+                registry, local, tp, fg_cfg)
+            digest_bytes += report.digest_bytes
+            delta_bytes += report.delta_bytes
+            pushback_bytes += report.pushback_bytes
+
+            vo = vec[observer]
+            for p in peers:
+                s = registry.slot_of(pid_of[p])
+                code = int(report.view.status[s])
+                p_le_o = bool(np.all(vec[p] <= vo))
+                o_le_p = bool(np.all(vo <= vec[p]))
+                if code == fr.FORKED:
+                    quarantines += 1
+                    if p_le_o or o_le_p:
+                        fn += 1      # §3 violation: can never happen
+                    continue
+                claims += 1
+                predicted.append(float(report.view.fp[s]))
+                truth_ok = {
+                    fr.ANCESTOR: p_le_o,
+                    fr.SAME: p_le_o and o_le_p,
+                    fr.DESCENDANT: o_le_p,
+                }[code]
+                if not truth_ok:
+                    fp_count += 1
+
+            # commit the round to BOTH clock families (receive rule)
+            accept_ids = [p for p in peers
+                          if report.accepted[registry.slot_of(pid_of[p])]]
+            merges += len(accept_ids)
+            if accept_ids:
+                union_vec = vo.copy()
                 for p in accept_ids:
-                    bloom[p] = np.asarray(merged.logical_cells(), np.int64)
-                    vec[p] = union_vec.copy()
+                    np.maximum(union_vec, vec[p], out=union_vec)
+                bloom[observer] = np.asarray(merged.logical_cells(), np.int64)
+                vec[observer] = union_vec
+                if fg_cfg.push_back:
+                    for p in accept_ids:
+                        bloom[p] = np.asarray(merged.logical_cells(), np.int64)
+                        vec[p] = union_vec.copy()
+    finally:
+        tp.close()
+        for server in servers:
+            server.stop()
 
     measured = fp_count / max(claims, 1)
     mean_pred = float(np.mean(predicted)) if predicted else 0.0
@@ -320,6 +380,10 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
         within_eq3_band=fm.fp_within_band(measured, mean_pred),
         merges=merges,
         quarantines=quarantines,
+        transport=tp.name,
+        digest_bytes=digest_bytes,
+        delta_bytes=delta_bytes,
+        pushback_bytes=pushback_bytes,
     )
 
 

@@ -5,8 +5,11 @@ is batch-oriented.  This package provides that machinery:
 
 - ``registry``  — fixed-capacity slab of peer clocks with batched
   admit/evict/update and a single-device-call ``classify_all``;
-- ``gossip``    — anti-entropy rounds over the registry (batched merge,
-  fork quarantine, straggler skipping);
+- ``gossip``    — anti-entropy round config/report + the loopback round
+  (batched merge, fork quarantine, straggler skipping);
+- ``transport`` — the pluggable gossip fabric: one session protocol
+  (digest → classify → delta → union → push-back) over loopback,
+  mesh-collective (ppermute digest ring), and TCP socket transports;
 - ``monitor``   — fleet health views built on the tiled all-pairs
   Pallas kernel (fork components, stragglers, fp histograms).
 """
@@ -22,6 +25,15 @@ from repro.fleet.registry import (
 )
 from repro.fleet.gossip import GossipConfig, GossipReport, gossip_round
 from repro.fleet.monitor import FleetHealth, fleet_health
+from repro.fleet.transport import (
+    ClockNode,
+    ClockPeerServer,
+    LoopbackTransport,
+    MeshCollectiveTransport,
+    SocketTransport,
+    Transport,
+    anti_entropy_session,
+)
 
 __all__ = [
     "ClockRegistry",
@@ -29,6 +41,13 @@ __all__ = [
     "GossipConfig",
     "GossipReport",
     "gossip_round",
+    "anti_entropy_session",
+    "Transport",
+    "LoopbackTransport",
+    "MeshCollectiveTransport",
+    "SocketTransport",
+    "ClockNode",
+    "ClockPeerServer",
     "FleetHealth",
     "fleet_health",
     "ANCESTOR",

@@ -1,37 +1,34 @@
-"""Anti-entropy gossip rounds over a ClockRegistry.
+"""Anti-entropy gossip: config, report, and the loopback round.
 
 One round = what a node does when it wakes up and reconciles with its
-view of the fleet, driven end-to-end by the fused kernels (no per-peer
-Python on the hot path):
+view of the fleet.  The protocol itself — digest exchange → classify
+via the ``CausalEngine`` → delta pull of §4 wire rows → one batched
+union merge → push-back — lives in ``fleet.transport.session`` and is
+parameterized by a :class:`~repro.fleet.transport.Transport`:
 
-1. ``classify_all``: one device call classifies every peer against the
-   local clock (lineage + Eq. 3 confidence).  A mesh-sharded registry
-   runs it shard_map'ed over the row shards transparently — the round's
-   policy and results are identical for every shard count.
-2. policy, on [N] host vectors: FORKED peers are quarantined (their
-   events diverged from ours — merging would launder a causality
-   violation); stragglers (clock-sum gap above ``straggler_gap`` below
-   the alive median) are skipped this round, not quarantined; remaining
-   comparable peers with fp within ``fp_threshold`` are accepted.
-3. one batched ``union`` merges the local clock with every accepted row
-   (paper §3 receive rule, applied fleet-wide in a single max-reduce).
-4. optional push-back: the merged union is broadcast into the accepted
-   rows, modelling the outbound half of anti-entropy — after a round the
-   accepted peers' registry rows equal the union, so a skipped straggler
-   that later syncs catches up instead of lagging forever.  The row
-   ships in §4 wire form — u8 residuals plus one base scalar (the
-   registry slab itself is packed, see ``kernels.pack``) — so the
-   outbound half costs ~4x less than an int32 row per peer;
-   ``GossipReport.pushback_bytes`` records the modelled wire cost.
+- ``LoopbackTransport``        the local registry slab is the fleet
+  (this module's ``gossip_round`` — the original single-process round,
+  bit-identical masks / merged cells / Eq. 3 fp bits);
+- ``MeshCollectiveTransport``  a mesh-sharded registry whose digest
+  exchange runs as a ``ppermute`` ring over the fleet axis — row shards
+  never round-trip through the host;
+- ``SocketTransport``          real processes exchanging length-prefixed
+  ``core.wire`` frames over TCP.
 
-The whole round costs O(N * m / lanes) device work and a handful of
-host<->device transfers independent of how many peers are accepted:
-the view fetch, the merged clock, and (with push-back) the packed row's
-scalar base + fits-u8 flag.
+The round's policy, on [N] host vectors: FORKED peers are quarantined
+(their events diverged from ours — merging would launder a causality
+violation); stragglers (clock-sum gap above ``straggler_gap`` below the
+alive median) are skipped this round, not quarantined; remaining
+comparable peers with Eq. 3 fp within the policy gate are accepted and
+merged in ONE batched union (paper §3 receive rule fleet-wide).  With
+push-back, the union ships back to every accepted peer in §4 wire form;
+``GossipReport`` records the MEASURED frame bytes of each phase, not a
+model estimate.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -42,38 +39,60 @@ from repro.fleet import registry as reg
 
 __all__ = ["GossipConfig", "GossipReport", "gossip_round"]
 
+_FP_DEFAULT = 1e-4
+
 
 @dataclasses.dataclass(frozen=True)
 class GossipConfig:
-    fp_threshold: float = 1e-4    # Eq. 3 confidence gate for merges
+    # DEPRECATED: pass ``policy=CausalPolicy(fp_threshold=...)`` instead.
+    # The scalar duplicated the policy's gate; it keeps working (and
+    # still wins when no policy is set) but warns on explicit use.
+    fp_threshold: Optional[float] = None
     straggler_gap: float = 64.0   # clock-sum ticks below alive median
     push_back: bool = True        # write the union into accepted rows
     # the one source of truth when set: rounds gate on
-    # ``policy.fp_threshold`` (overriding the scalar above), so a
-    # runtime can thread its CausalPolicy straight through gossip
+    # ``policy.fp_threshold``, so a runtime threads its CausalPolicy
+    # straight through gossip
     policy: Optional[CausalPolicy] = None
+
+    def __post_init__(self):
+        if self.fp_threshold is not None:
+            warnings.warn(
+                "GossipConfig.fp_threshold is deprecated; pass "
+                "policy=CausalPolicy(fp_threshold=...) — the policy is "
+                "the one source of truth for the Eq. 3 gate",
+                DeprecationWarning, stacklevel=3)
 
     @property
     def fp_gate(self) -> float:
-        return (self.policy.fp_threshold if self.policy is not None
-                else self.fp_threshold)
+        if self.policy is not None:
+            return self.policy.fp_threshold
+        return _FP_DEFAULT if self.fp_threshold is None else self.fp_threshold
 
 
 @dataclasses.dataclass
 class GossipReport:
-    """Outcome masks of one round (numpy, [capacity])."""
+    """Outcome masks of one round (numpy, [capacity]) + measured wire."""
 
     accepted: np.ndarray          # merged this round
     quarantined: np.ndarray       # FORKED -> excluded until resolved
     stragglers: np.ndarray        # skipped this round (not quarantined)
     unconfident: np.ndarray       # comparable but fp above threshold
     view: reg.FleetView           # the classification the round acted on
-    pushback_bytes: int = 0       # wire cost of the outbound half (§4 form)
+    pushback_bytes: int = 0       # MEASURED outbound frame bytes (§4 form)
+    digest_bytes: int = 0         # MEASURED inbound digest-exchange bytes
+    delta_bytes: int = 0          # MEASURED inbound delta-frame bytes
+    transport: str = "loopback"   # fabric the session ran over
     shards: int = 1               # device shards the registry slab spans
 
     @property
     def n_accepted(self) -> int:
         return int(self.accepted.sum())
+
+    @property
+    def wire_bytes(self) -> int:
+        """Total measured bytes this round moved over the fabric."""
+        return self.digest_bytes + self.delta_bytes + self.pushback_bytes
 
     def summary(self) -> str:
         return (
@@ -81,7 +100,8 @@ class GossipReport:
             f"quarantined={int(self.quarantined.sum())} "
             f"stragglers={int(self.stragglers.sum())} "
             f"unconfident={int(self.unconfident.sum())} "
-            f"alive={int(self.view.alive.sum())}"
+            f"alive={int(self.view.alive.sum())} "
+            f"wire={self.wire_bytes}B[{self.transport}]"
         )
 
 
@@ -90,40 +110,13 @@ def gossip_round(
     local: bc.BloomClock,
     cfg: GossipConfig = GossipConfig(),
 ) -> tuple[bc.BloomClock, GossipReport]:
-    """Run one anti-entropy round; returns (merged local clock, report)."""
-    view = registry.classify_all(local)
-    alive = view.alive
+    """One anti-entropy round over the LOCAL registry slab.
 
-    quarantined = alive & (view.status == reg.FORKED)
-
-    stragglers = np.zeros_like(alive)
-    if alive.any():
-        med = float(np.median(view.sums[alive]))
-        stragglers = alive & ~quarantined & (
-            (med - view.sums) > cfg.straggler_gap)
-
-    comparable = alive & ~quarantined & ~stragglers
-    unconfident = comparable & ~view.confident(cfg.fp_gate)
-    accepted = comparable & ~unconfident
-
-    merged = local
-    pushback_bytes = 0
-    if accepted.any():
-        merged = registry.union(accepted, local)
-        merged = bc.compress(merged)
-        if cfg.push_back:
-            shipped_packed = registry.broadcast(accepted, merged)
-            # u8 residuals + int32 base per accepted peer when the row
-            # packs; int32 cells otherwise (promoted-row fallback)
-            cell_bytes = registry.m * (1 if shipped_packed else 4)
-            pushback_bytes = int(accepted.sum()) * (cell_bytes + 4)
-
-    return merged, GossipReport(
-        accepted=accepted,
-        quarantined=quarantined,
-        stragglers=stragglers,
-        unconfident=unconfident,
-        view=view,
-        pushback_bytes=pushback_bytes,
-        shards=registry.n_shards,
-    )
+    Loopback session: identical decision math to every other transport,
+    with the peer rows already in the slab (no digest/delta traffic).
+    Returns (merged local clock, report).
+    """
+    from repro.fleet.transport import LoopbackTransport
+    from repro.fleet.transport.session import anti_entropy_session
+    return anti_entropy_session(registry, local, LoopbackTransport(registry),
+                                cfg)

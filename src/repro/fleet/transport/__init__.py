@@ -1,0 +1,39 @@
+"""Pluggable gossip transport fabric.
+
+The anti-entropy protocol (``anti_entropy_session``) is one pure
+session — digest exchange → classify via the ``CausalEngine`` → delta
+pull of §4 wire rows → batched union merge → push-back — parameterized
+by a :class:`Transport`:
+
+- :class:`LoopbackTransport`        the local registry slab is the
+  fleet (bit-identical to the original single-process ``gossip_round``);
+- :class:`MeshCollectiveTransport`  mesh-sharded registries exchange
+  digest shards over a ``ppermute`` ring, rows never leave the devices;
+- :class:`SocketTransport`          real processes exchanging
+  length-prefixed, CRC-checked ``core.wire`` frames over TCP
+  (:class:`ClockPeerServer` / :class:`ClockNode` are the serving side).
+
+Every report byte count is measured from the frames that actually
+moved, so loopback, mesh, and socket sessions are comparable.
+"""
+from repro.fleet.transport.base import Transport
+from repro.fleet.transport.loopback import LoopbackTransport
+from repro.fleet.transport.mesh import MeshCollectiveTransport
+from repro.fleet.transport.session import anti_entropy_session
+from repro.fleet.transport.socket import (
+    ClockNode,
+    ClockPeerServer,
+    SocketTransport,
+    TransportError,
+)
+
+__all__ = [
+    "Transport",
+    "LoopbackTransport",
+    "MeshCollectiveTransport",
+    "SocketTransport",
+    "ClockNode",
+    "ClockPeerServer",
+    "TransportError",
+    "anti_entropy_session",
+]

@@ -1,0 +1,63 @@
+"""The Transport interface anti-entropy sessions are parameterized by.
+
+A transport answers three questions for one node's gossip session, and
+nothing else — classification, policy, and merging stay in the session
+protocol (``fleet.transport.session``):
+
+- ``digests()``   — the inbound half of the digest exchange: who are my
+  peers and what is the content key of each one's clock right now?
+- ``pull(ids)``   — the delta: encoded §4 wire frames for exactly the
+  peers whose digest no longer matches what this node ingested.
+- ``push(ids, frame)`` — the outbound half: ship the merged union row
+  to the accepted peers.
+
+Every method returns MEASURED byte counts (the length of the frames
+that actually moved), so ``GossipReport`` wire costs are observations,
+not model estimates.
+
+``authoritative`` transports (loopback, mesh-collective) hold the peer
+rows in the session's own registry slab — there is nothing to pull and
+ingest, so their sessions reduce to exactly the pre-transport
+``gossip_round`` (bit-identical masks, merged cells, and fp bits).  The
+socket transport is non-authoritative: the session's registry is a
+staging replica of remote processes, kept in sync by digest/delta.
+"""
+from __future__ import annotations
+
+import abc
+
+from repro.core import wire
+
+__all__ = ["Transport"]
+
+
+class Transport(abc.ABC):
+    """Peer fabric one anti-entropy session runs over."""
+
+    #: short name recorded in ``GossipReport.transport`` / bench records
+    name: str = "abstract"
+
+    #: True when the session registry IS the peer state (no delta phase)
+    authoritative: bool = False
+
+    def __init__(self) -> None:
+        # content keys (``ClockDigest.key``) already ingested per peer:
+        # the session pulls only peers whose advertised key differs, so
+        # an unchanged fleet costs digest bytes only.
+        self.have: dict = {}
+
+    @abc.abstractmethod
+    def digests(self) -> tuple[dict[str, wire.ClockDigest], int]:
+        """(peer_id -> digest, measured inbound digest bytes)."""
+
+    @abc.abstractmethod
+    def pull(self, peer_ids) -> tuple[dict[str, bytes], int]:
+        """(peer_id -> encoded clock frame, measured inbound bytes)."""
+
+    @abc.abstractmethod
+    def push(self, peer_ids, frame: bytes) -> int:
+        """Ship the merged-union frame to every peer; returns measured
+        outbound bytes."""
+
+    def close(self) -> None:
+        """Release sockets/handles (no-op for in-process transports)."""

@@ -1,0 +1,38 @@
+"""LoopbackTransport: the local registry slab IS the fleet.
+
+The original single-process gossip deployment, expressed as a
+transport: peer rows are already in the session registry (admitted by
+whatever owns it), so the digest and delta phases carry zero bytes and
+the session reduces to exactly the pre-transport ``gossip_round`` —
+same masks, same merged cells, same Eq. 3 fp bits.  Push-back is the
+registry broadcast the session already performs; this transport only
+measures what the outbound half WOULD cost on a real wire (one encoded
+§4 frame per accepted peer), so loopback reports are comparable with
+socket reports byte-for-byte.
+"""
+from __future__ import annotations
+
+from repro.core import wire
+from repro.fleet.transport.base import Transport
+
+__all__ = ["LoopbackTransport"]
+
+
+class LoopbackTransport(Transport):
+    name = "loopback"
+    authoritative = True
+
+    def __init__(self, registry):
+        super().__init__()
+        self.registry = registry
+
+    def digests(self) -> tuple[dict[str, wire.ClockDigest], int]:
+        return {}, 0
+
+    def pull(self, peer_ids) -> tuple[dict[str, bytes], int]:
+        return {}, 0
+
+    def push(self, peer_ids, frame: bytes) -> int:
+        # delivery is the session's registry.broadcast; the frame length
+        # is the measured per-peer wire cost of that outbound half
+        return len(frame) * len(peer_ids)

@@ -1,0 +1,125 @@
+"""The transport-agnostic anti-entropy session protocol.
+
+One session is the full reconcile a node runs when it wakes up,
+factored so that WHERE the peer rows live is the transport's problem
+and WHAT the node decides is shared, bit-for-bit, across fabrics:
+
+1. **digest exchange** — ``transport.digests()`` advertises every
+   peer's content key (clock-sum + §4 base + cells CRC).  Authoritative
+   transports (loopback / mesh-collective) skip ingest entirely: the
+   session registry already IS the peer state.
+2. **delta pull** — only peers whose key differs from what this node
+   last ingested are pulled, as ``core.wire`` clock frames, decoded
+   (validated — truncated/corrupted frames raise, never merge) and
+   scattered into the registry in one ``admit_many``/``update_many``
+   batch.
+3. **classify** — one ``registry.classify_all`` device call through the
+   ``CausalEngine`` (shard_map'd transparently on a mesh-sharded slab).
+4. **policy** — quarantine FORKED peers, skip stragglers, gate the
+   comparable rest on the Eq. 3 confidence threshold.  Pure numpy on
+   [N] host vectors; this is verbatim the pre-transport ``gossip_round``
+   policy, which is what keeps loopback sessions bit-identical to it.
+5. **union merge** — one batched max-reduce over the accepted rows
+   (paper §3 receive rule fleet-wide), then §4 re-compress.
+6. **push-back** — the union is written into the accepted registry rows
+   (the local view of the outbound half) and shipped to the accepted
+   peers as ONE encoded §4 wire frame via ``transport.push``.  Reported
+   bytes are the measured ``len(frame)`` costs, not an estimate.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import clock as bc
+from repro.core import wire
+from repro.fleet import registry as reg
+from repro.fleet.gossip import GossipConfig, GossipReport
+from repro.fleet.transport.base import Transport
+
+__all__ = ["anti_entropy_session"]
+
+
+def _ingest_delta(registry: reg.ClockRegistry,
+                  transport: Transport) -> tuple[int, int]:
+    """Digest exchange + delta pull into the session registry.
+
+    Returns measured (digest_bytes, delta_bytes).  Peers advertised with
+    an unchanged content key are skipped; vanished peers are left in the
+    registry (liveness is the registry owner's policy, not the wire's).
+    """
+    digests, digest_bytes = transport.digests()
+    if transport.authoritative:
+        return digest_bytes, 0
+    wanted = [pid for pid, d in digests.items()
+              if transport.have.get(pid) != d.key]
+    if not wanted:
+        return digest_bytes, 0
+    frames, delta_bytes = transport.pull(wanted)
+    clocks = {pid: bc.from_wire(frame) for pid, frame in frames.items()}
+    known = {pid: c for pid, c in clocks.items() if pid in registry}
+    fresh = {pid: c for pid, c in clocks.items() if pid not in registry}
+    if known:
+        registry.update_many(known)
+    if fresh:
+        registry.admit_many(fresh)
+    for pid in clocks:
+        transport.have[pid] = digests[pid].key
+    return digest_bytes, delta_bytes
+
+
+def anti_entropy_session(
+    registry: reg.ClockRegistry,
+    local: bc.BloomClock,
+    transport: Transport,
+    cfg: GossipConfig = GossipConfig(),
+) -> tuple[bc.BloomClock, GossipReport]:
+    """Run one anti-entropy session; returns (merged local clock, report)."""
+    digest_bytes, delta_bytes = _ingest_delta(registry, transport)
+
+    view = registry.classify_all(local)
+    alive = view.alive
+
+    quarantined = alive & (view.status == reg.FORKED)
+
+    stragglers = np.zeros_like(alive)
+    if alive.any():
+        med = float(np.median(view.sums[alive]))
+        stragglers = alive & ~quarantined & (
+            (med - view.sums) > cfg.straggler_gap)
+
+    comparable = alive & ~quarantined & ~stragglers
+    unconfident = comparable & ~view.confident(cfg.fp_gate)
+    accepted = comparable & ~unconfident
+
+    merged = local
+    pushback_bytes = 0
+    if accepted.any():
+        merged = registry.union(accepted, local)
+        merged = bc.compress(merged)
+        if cfg.push_back:
+            snap = bc.to_wire(merged)
+            frame = wire.encode_clock(snap)
+            registry.broadcast(accepted, merged)
+            accepted_ids = [pid for pid in registry.peer_ids()
+                            if accepted[registry.slot_of(pid)]]
+            pushback_bytes = transport.push(accepted_ids, frame)
+            if not transport.authoritative:
+                # the union row is now what those peers hold (unless
+                # they tick first, which the next digest exchange sees)
+                key = wire.digest_of("", snap["cells"], snap["base"],
+                                     snap["k"]).key
+                for pid in accepted_ids:
+                    transport.have[pid] = key
+
+    return merged, GossipReport(
+        accepted=accepted,
+        quarantined=quarantined,
+        stragglers=stragglers,
+        unconfident=unconfident,
+        view=view,
+        pushback_bytes=pushback_bytes,
+        digest_bytes=digest_bytes,
+        delta_bytes=delta_bytes,
+        transport=transport.name,
+        shards=registry.n_shards,
+    )

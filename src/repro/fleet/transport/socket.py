@@ -1,0 +1,244 @@
+"""SocketTransport: anti-entropy over TCP between real processes.
+
+The multi-host deployment of the gossip fabric.  Every participating
+process runs a :class:`ClockPeerServer` — a tiny threaded TCP server
+answering three requests about ONE node's clock — and a session on any
+node reaches its peers through a :class:`SocketTransport` holding their
+addresses.  All clock payloads are ``core.wire`` frames (§4 u8
+residuals + base, versioned header, CRC trailer), so a truncated or
+corrupted byte stream is rejected at decode, never merged.
+
+Message envelope (both directions):
+
+    bytes 0-3   payload length, u32
+    byte  4     protocol version (1)
+    byte  5     message type
+    ...         payload
+
+Types: ``DIGEST`` (empty -> digest frame), ``PULL`` (empty -> clock
+frame), ``PUSH`` (clock frame -> 1-byte ack; the server merges the
+union into its node, the §3 receive rule), ``ERR`` (utf-8 reason).
+
+:class:`ClockNode` is the host-side clock state a server exposes: plain
+numpy + a lock, so server processes need no device work to answer a
+request.  Sessions stay pull-driven and idempotent — a node that
+crashes and restarts re-converges from digests alone.
+"""
+from __future__ import annotations
+
+import socket
+import socketserver
+import struct
+import threading
+
+import numpy as np
+
+from repro.core import wire
+from repro.fleet.transport.base import Transport
+
+__all__ = ["ClockNode", "ClockPeerServer", "SocketTransport",
+           "TransportError"]
+
+PROTO_VERSION = 1
+MSG_DIGEST, MSG_PULL, MSG_PUSH, MSG_ACK, MSG_ERR = 1, 2, 3, 4, 255
+
+_ENVELOPE = struct.Struct("!IBB")
+_MAX_PAYLOAD = 64 * 1024 * 1024
+
+
+class TransportError(RuntimeError):
+    """A peer answered with an error or spoke a different protocol."""
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise TransportError(
+                f"connection closed mid-message ({len(buf)}/{n} bytes)")
+        buf += chunk
+    return bytes(buf)
+
+
+def _send_msg(sock: socket.socket, msg_type: int, payload: bytes = b"") -> None:
+    sock.sendall(_ENVELOPE.pack(len(payload), PROTO_VERSION, msg_type)
+                 + payload)
+
+
+def _recv_msg(sock: socket.socket) -> tuple[int, bytes]:
+    length, version, msg_type = _ENVELOPE.unpack(
+        _recv_exact(sock, _ENVELOPE.size))
+    if version != PROTO_VERSION:
+        raise TransportError(
+            f"peer speaks protocol version {version}, "
+            f"this build speaks {PROTO_VERSION}")
+    if length > _MAX_PAYLOAD:
+        raise TransportError(f"refusing {length}-byte payload "
+                             f"(cap {_MAX_PAYLOAD})")
+    return msg_type, _recv_exact(sock, length)
+
+
+class ClockNode:
+    """One process's servable clock state: numpy cells + a lock.
+
+    The owning process mutates it (``set_cells`` from its runtime clock,
+    or inbound ``merge_snapshot`` applied by its server thread); any
+    peer's session reads it through digest / snapshot requests.
+    """
+
+    def __init__(self, peer_id: str, m: int, k: int = 4):
+        self.peer_id = str(peer_id)
+        self.m = int(m)
+        self.k = int(k)
+        self._cells = np.zeros(m, np.int64)      # logical cells, base 0
+        self._lock = threading.Lock()
+
+    def set_cells(self, cells) -> None:
+        cells = np.asarray(cells, np.int64)
+        assert cells.shape == (self.m,), (cells.shape, self.m)
+        with self._lock:
+            self._cells = cells.copy()
+
+    def cells(self) -> np.ndarray:
+        with self._lock:
+            return self._cells.copy()
+
+    def merge_snapshot(self, snap: dict) -> None:
+        """§3 receive rule: element-wise max with an inbound wire row."""
+        inbound = (np.asarray(snap["cells"], np.int64)
+                   + int(snap["base"]))
+        if inbound.shape != (self.m,):
+            raise wire.WireFormatError(
+                f"frame carries m={inbound.shape[0]} cells, "
+                f"node {self.peer_id!r} has m={self.m}")
+        with self._lock:
+            np.maximum(self._cells, inbound, out=self._cells)
+
+    def snapshot(self) -> dict:
+        """§4 wire form of the current cells (u8 residuals when the
+        window fits a byte, int32 otherwise) — ``core.clock.to_wire``
+        semantics without touching a device."""
+        cells = self.cells()
+        base = int(cells.min()) if cells.size else 0
+        resid = cells - base
+        if resid.max(initial=0) <= 255:
+            out = resid.astype(np.uint8)
+        else:
+            out = resid.astype(np.int32)
+        return {"cells": out, "base": base, "k": self.k}
+
+    def digest(self) -> wire.ClockDigest:
+        return wire.digest_of(self.peer_id, self.cells(), 0, self.k)
+
+
+class _Handler(socketserver.BaseRequestHandler):
+    def handle(self):
+        node: ClockNode = self.server.node    # type: ignore[attr-defined]
+        try:
+            msg_type, payload = _recv_msg(self.request)
+            if msg_type == MSG_DIGEST:
+                _send_msg(self.request, MSG_DIGEST,
+                          wire.encode_digest(node.digest()))
+            elif msg_type == MSG_PULL:
+                _send_msg(self.request, MSG_PULL,
+                          wire.encode_clock(node.snapshot()))
+            elif msg_type == MSG_PUSH:
+                node.merge_snapshot(wire.decode_clock(payload))
+                _send_msg(self.request, MSG_ACK, b"\x01")
+            else:
+                _send_msg(self.request, MSG_ERR,
+                          f"unknown message type {msg_type}".encode())
+        except (wire.WireFormatError, TransportError) as e:
+            try:
+                _send_msg(self.request, MSG_ERR, str(e).encode())
+            except OSError:
+                pass
+
+
+class _Server(socketserver.ThreadingTCPServer):
+    allow_reuse_address = True
+    daemon_threads = True
+
+
+class ClockPeerServer:
+    """Threaded TCP server exposing one ``ClockNode`` to the fleet."""
+
+    def __init__(self, node: ClockNode, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.node = node
+        self._server = _Server((host, port), _Handler)
+        self._server.node = node              # type: ignore[attr-defined]
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, daemon=True,
+            name=f"clock-peer-{node.peer_id}")
+
+    @property
+    def address(self) -> tuple[str, int]:
+        return self._server.server_address[:2]
+
+    def start(self) -> "ClockPeerServer":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+
+
+class SocketTransport(Transport):
+    """Reach a fleet of ``ClockPeerServer`` processes over TCP.
+
+    ``peers`` maps peer_id -> (host, port).  Connections are
+    per-request (the payloads are one frame each); ``timeout`` guards
+    every socket operation so a hung peer fails the session loudly
+    instead of stalling it.
+    """
+
+    name = "socket"
+    authoritative = False
+
+    def __init__(self, peers: dict, timeout: float = 5.0):
+        super().__init__()
+        self.peers = {str(pid): tuple(addr) for pid, addr in peers.items()}
+        self.timeout = timeout
+
+    def _request(self, pid: str, msg_type: int,
+                 payload: bytes = b"") -> bytes:
+        host, port = self.peers[pid]
+        with socket.create_connection((host, port),
+                                      timeout=self.timeout) as sock:
+            _send_msg(sock, msg_type, payload)
+            kind, reply = _recv_msg(sock)
+        if kind == MSG_ERR:
+            raise TransportError(
+                f"peer {pid!r} at {host}:{port} rejected the request: "
+                f"{reply.decode(errors='replace')}")
+        if kind != msg_type and not (msg_type == MSG_PUSH
+                                     and kind == MSG_ACK):
+            raise TransportError(
+                f"peer {pid!r} answered type {kind} to a {msg_type} request")
+        return reply
+
+    def digests(self) -> tuple[dict[str, wire.ClockDigest], int]:
+        digs, nbytes = {}, 0
+        for pid in self.peers:
+            reply = self._request(pid, MSG_DIGEST)
+            digs[pid] = wire.decode_digest(reply)
+            nbytes += len(reply)
+        return digs, nbytes
+
+    def pull(self, peer_ids) -> tuple[dict[str, bytes], int]:
+        frames, nbytes = {}, 0
+        for pid in peer_ids:
+            frame = self._request(pid, MSG_PULL)
+            frames[pid] = frame
+            nbytes += len(frame)
+        return frames, nbytes
+
+    def push(self, peer_ids, frame: bytes) -> int:
+        sent = 0
+        for pid in peer_ids:
+            self._request(pid, MSG_PUSH, frame)
+            sent += len(frame)
+        return sent

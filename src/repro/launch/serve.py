@@ -3,6 +3,11 @@
 Example (CPU, reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1_5_0_5b --smoke \\
       --batch 4 --prompt-len 32 --gen 16
+
+With ``--peers "id@host:port,..."`` the replica joins a multi-process
+gossip fleet: after serving it runs one anti-entropy session over a
+``SocketTransport`` to the listed ``ClockPeerServer`` processes (see
+``repro.launch.peers``), so replica clocks reconcile across hosts.
 """
 from __future__ import annotations
 
@@ -28,6 +33,10 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--peers", type=str, default=None,
+                    help="gossip fleet peers, 'id@host:port,...' "
+                         "(repro.launch.peers serves them)")
+    ap.add_argument("--replica-id", type=str, default="replica0")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -52,6 +61,17 @@ def main():
           f"({args.batch*args.gen/(t2-t1):.1f} tok/s)")
     print(f"[serve] sample outputs: {out[:, :8].tolist()}")
     print(f"[serve] engine clock sum: {float(engine.clock.clock.sum()):.0f}")
+
+    if args.peers:
+        from repro.launch.peers import parse_peers, transport_from_specs
+        specs = parse_peers(args.peers)
+        transport = transport_from_specs(specs, exclude=args.replica_id)
+        registry = engine.clock.make_registry(
+            capacity=max(8, 2 * len(specs)))
+        report = engine.clock.gossip(registry, transport=transport)
+        print(f"[serve] gossip[{report.transport}] {report.summary()}")
+        print(f"[serve] post-gossip clock sum: "
+              f"{float(engine.clock.clock.sum()):.0f}")
 
 
 if __name__ == "__main__":

@@ -165,6 +165,31 @@ class ClockRuntime:
                              mesh=mesh, axis=FLEET_AXIS if axis is None else axis,
                              policy=self.policy)
 
+    def gossip(self, registry, cfg=None, transport=None):
+        """One anti-entropy session; the merged union becomes the
+        runtime clock.
+
+        ``transport`` picks the fabric (``fleet.transport``): default is
+        a ``LoopbackTransport`` over ``registry`` — the single-process
+        round.  Pass a ``MeshCollectiveTransport`` for a mesh-sharded
+        registry or a ``SocketTransport`` to reconcile with real peer
+        processes (``registry`` is then the staging replica the wire
+        frames sync).  The session gates on this runtime's
+        ``CausalPolicy`` unless ``cfg`` overrides it.
+        """
+        from repro.fleet.gossip import GossipConfig
+        from repro.fleet.transport import LoopbackTransport
+        from repro.fleet.transport.session import anti_entropy_session
+        if cfg is None:
+            cfg = GossipConfig(policy=self.policy,
+                               straggler_gap=self.cfg.straggler_gap)
+        if transport is None:
+            transport = LoopbackTransport(registry)
+        merged, report = anti_entropy_session(
+            registry, self.clock, transport, cfg)
+        self.clock = merged
+        return report
+
     def refined_fp(self, other: bc.BloomClock) -> float:
         """§3 history refinement: fp against the closest dominating stored
         timestamp instead of the newest."""

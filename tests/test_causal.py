@@ -382,10 +382,15 @@ def test_policy_is_single_source_of_truth():
     reg = rt.make_registry(8)
     assert reg.policy.fp_threshold == 0.5
     assert reg.policy.engine == "i32"
-    # GossipConfig: the policy's threshold wins over the legacy scalar
-    cfg = GossipConfig(fp_threshold=1e-9, policy=pol)
+    # GossipConfig: the policy's threshold wins over the legacy scalar,
+    # and explicit use of the scalar warns (deliberate shim exercise)
+    with pytest.warns(DeprecationWarning, match="fp_threshold is deprecated"):
+        cfg = GossipConfig(fp_threshold=1e-9, policy=pol)
     assert cfg.fp_gate == 0.5
-    assert GossipConfig(fp_threshold=1e-9).fp_gate == 1e-9
+    with pytest.warns(DeprecationWarning, match="fp_threshold is deprecated"):
+        legacy = GossipConfig(fp_threshold=1e-9)
+    assert legacy.fp_gate == 1e-9
+    assert GossipConfig().fp_gate == 1e-4    # default: no warning, old gate
 
 
 def test_gossip_policy_equivalent_to_scalar_threshold():
@@ -398,7 +403,9 @@ def test_gossip_policy_equivalent_to_scalar_threshold():
         reg.admit_many(rows)
         return gossip_round(reg, local, cfg)[1]
 
-    a = run(GossipConfig(fp_threshold=0.9))
+    with pytest.warns(DeprecationWarning, match="fp_threshold is deprecated"):
+        legacy_cfg = GossipConfig(fp_threshold=0.9)
+    a = run(legacy_cfg)
     b = run(GossipConfig(policy=causal.CausalPolicy(fp_threshold=0.9)))
     np.testing.assert_array_equal(a.accepted, b.accepted)
     np.testing.assert_array_equal(a.unconfident, b.unconfident)

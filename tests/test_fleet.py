@@ -175,7 +175,8 @@ def test_registry_union_dominates_members():
 
 def test_gossip_round_policy():
     reg, local = _seeded_registry()
-    merged, report = gossip_round(reg, local, GossipConfig(fp_threshold=1.0))
+    merged, report = gossip_round(
+        reg, local, GossipConfig(policy=causal.CausalPolicy(fp_threshold=1.0)))
     assert report.quarantined[reg.slot_of("fork")]
     assert report.n_accepted == 3
     # merged absorbed the descendant's extra events
@@ -196,7 +197,8 @@ def test_gossip_straggler_skipped_not_quarantined():
         "lagging": _ticked(bc.zeros(m, k), range(2)),   # ancestor, far behind
     })
     merged, report = gossip_round(
-        reg, local, GossipConfig(fp_threshold=1.0, straggler_gap=10.0))
+        reg, local, GossipConfig(policy=causal.CausalPolicy(fp_threshold=1.0),
+                                 straggler_gap=10.0))
     s = reg.slot_of("lagging")
     assert report.stragglers[s] and not report.accepted[s]
     assert not report.quarantined[s]

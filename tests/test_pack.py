@@ -213,13 +213,19 @@ def test_wire_falls_back_to_int32():
 
 
 def test_gossip_pushback_reports_u8_wire_cost():
+    from repro.core import wire
+
     m, k = 128, 3
     reg = ClockRegistry(capacity=4, m=m, k=k)
     local = _ticked(bc.zeros(m, k), range(20))
     reg.admit_many({"p1": _ticked(bc.zeros(m, k), range(10)), "p2": local})
     merged, report = gossip_round(reg, local)
     assert report.n_accepted == 2
-    assert report.pushback_bytes == 2 * (m + 4)   # u8 cells + int32 base
+    # MEASURED: the length of the encoded §4 frame that ships per peer
+    # (u8 residuals here), not the old m * cell_bytes model
+    frame = wire.encode_clock(bc.to_wire(merged))
+    assert len(frame) == wire.clock_frame_nbytes(m, packed=True)
+    assert report.pushback_bytes == 2 * len(frame)
     view = reg.classify_all(merged)
     for pid in ("p1", "p2"):
         assert view.status[reg.slot_of(pid)] == SAME

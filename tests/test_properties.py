@@ -155,6 +155,7 @@ def test_gossip_merge_is_fleet_lub(peer_events, local_events):
     """Gossip invariant: the merged clock dominates the local clock and
     every accepted peer, and never absorbs a quarantined (forked) peer's
     unilateral events beyond what accepted peers supplied."""
+    from repro.causal import CausalPolicy
     from repro.fleet import ClockRegistry, GossipConfig, gossip_round
 
     m, k = 64, 3
@@ -164,7 +165,8 @@ def test_gossip_merge_is_fleet_lub(peer_events, local_events):
              for i, evs in enumerate(peer_events)}
     reg.admit_many(peers)
     merged, report = gossip_round(
-        reg, local, GossipConfig(fp_threshold=1.0, push_back=False))
+        reg, local, GossipConfig(policy=CausalPolicy(fp_threshold=1.0),
+                                 push_back=False))
     assert bool(bc.ordering(local, merged).a_le_b)
     lub = local.logical_cells()
     for i, p in peers.items():

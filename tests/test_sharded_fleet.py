@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.causal import CausalPolicy
 from repro.core import clock as bc
 from repro.core.sim import SimConfig, run_gossip_sim
 from repro.fleet import ClockRegistry, GossipConfig, fleet_health, gossip_round
@@ -131,7 +132,7 @@ def test_gossip_round_sharded_matches_unsharded(host_devices):
     registry and reports the shard count."""
     peers = _random_fleet(11)
     local = peers["peer2"]
-    cfg = GossipConfig(fp_threshold=1.0, push_back=True)
+    cfg = GossipConfig(policy=CausalPolicy(fp_threshold=1.0), push_back=True)
     m_ref, r_ref = gossip_round(_filled(peers), local, cfg)
     for shards in (2, 4):
         reg = _filled(peers, mesh=make_fleet_mesh(shards))

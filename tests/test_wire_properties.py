@@ -1,0 +1,73 @@
+"""Hypothesis round-trip properties for the binary wire format.
+
+Separate from tests/test_transport.py so a missing hypothesis skips
+ONLY the property sweep (repo idiom, see tests/test_properties.py);
+the deterministic wire-robustness tests always run.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# optional dev dependency: skip cleanly instead of aborting collection
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clock as bc
+from repro.core import wire
+from repro.fleet import ClockRegistry
+from repro.launch.mesh import make_fleet_mesh
+
+_settings = settings(max_examples=40, deadline=None)
+
+
+@_settings
+@given(
+    m=st.integers(4, 96),
+    base=st.integers(0, 1 << 20),
+    hi=st.sampled_from([5, 200, 255, 256, 5000]),   # u8-packed AND promoted
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_wire_roundtrip_property(m, base, hi, seed):
+    """encode -> decode is lossless for every §4 representation the
+    quantizer can pick, and picks u8 exactly when the window fits."""
+    rng = np.random.default_rng(seed)
+    cells = rng.integers(0, hi + 1, m)
+    c = bc.BloomClock(jnp.asarray(cells, jnp.int32),
+                      jnp.asarray(int(base), jnp.int32), 4)
+    snap = bc.to_wire(c)
+    span = int(cells.max() - cells.min())
+    assert (np.asarray(snap["cells"]).dtype == np.uint8) == (span <= 255)
+    back = bc.from_wire(wire.encode_clock(snap))
+    np.testing.assert_array_equal(np.asarray(back.logical_cells()),
+                                  np.asarray(c.logical_cells()))
+    # digest content key is invariant across the wire representation
+    assert (wire.digest_of("x", np.asarray(c.logical_cells()), 0).crc
+            == wire.digest_of("x", snap["cells"], snap["base"]).crc)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_wire_roundtrip_across_shard_boundaries(seed):
+    """Rows fetched from a mesh-sharded slab (including rows at the
+    shard boundary and a promoted int32 row) survive the wire
+    unchanged."""
+    rng = np.random.default_rng(seed)
+    m, shards, cap = 64, 2, 8
+    if len(__import__("jax").devices()) < shards:
+        pytest.skip("needs forced multi-device host platform")
+    reg = ClockRegistry(capacity=cap, m=m, k=3,
+                        mesh=make_fleet_mesh(shards))
+    rows = {f"p{i}": bc.BloomClock(jnp.asarray(rng.integers(0, 9, m),
+                                               jnp.int32),
+                                   jnp.zeros((), jnp.int32), 3)
+            for i in range(cap)}
+    wide = np.zeros(m, np.int64)
+    wide[1] = 999
+    rows["p5"] = bc.BloomClock(jnp.asarray(wide, jnp.int32),
+                               jnp.zeros((), jnp.int32), 3)
+    reg.admit_many(rows)
+    for pid in rows:
+        c = reg.get(pid)
+        back = bc.from_wire(wire.encode_clock(bc.to_wire(c)))
+        np.testing.assert_array_equal(np.asarray(back.logical_cells()),
+                                      np.asarray(c.logical_cells()), pid)
