@@ -369,6 +369,83 @@ def bench_transports(n: int, m: int, transports: list,
     return rows
 
 
+def bench_observer(n: int = 256, m: int = 512,
+                   records: list | None = None) -> list:
+    """Observability overhead on a full loopback anti-entropy session:
+    observer off (no Observer anywhere), attached-but-disabled (null
+    sinks — must be in the noise), and fully on (tracing + metrics into
+    in-memory sinks — the acceptance bar is <= 5% over observer-off).
+    Audit is excluded here: it snapshots registry rows per verdict and
+    is priced separately by its own record."""
+    from repro.fleet.transport import LoopbackTransport
+    from repro.fleet.transport.session import anti_entropy_session
+    from repro.obs import (AuditTrail, MetricsRecorder, Observer, Tracer)
+
+    records = records if records is not None else []
+    rows = []
+    shape = f"n{n}_m{m}"
+    peer_cells = np.asarray(_rand_cells(n, m))
+    local = bc.BloomClock(jnp.asarray(peer_cells.max(axis=0) + 1),
+                          jnp.zeros((), jnp.int32), 4)
+
+    def setup(observer):
+        policy = CausalPolicy(fp_threshold=1.0, observer=observer)
+        registry = ClockRegistry(capacity=n, m=m, k=4, policy=policy)
+        registry.admit_many({
+            f"peer{i}": bc.BloomClock(jnp.asarray(peer_cells[i]),
+                                      jnp.zeros((), jnp.int32), 4)
+            for i in range(n)})
+        tp = LoopbackTransport(registry)
+        cfg = GossipConfig(policy=policy, straggler_gap=np.inf)
+        anti_entropy_session(registry, local, tp, cfg)      # warm/compile
+        return registry, tp, cfg
+
+    variants = {
+        "off": setup(None),
+        "null": setup(Observer()),          # attached, every sink null
+        "on": setup(Observer(trace=Tracer(), metrics=MetricsRecorder())),
+        "audit": setup(Observer(trace=Tracer(), metrics=MetricsRecorder(),
+                                audit=AuditTrail())),
+    }
+    # interleave the variants round-robin and take per-variant medians:
+    # machine drift (allocator, thermal, co-tenants) moves all four
+    # together, so back-to-back blocks would misattribute it as
+    # observer cost (or credit).  30 rounds x ~7ms keeps this < 1s.
+    samples: dict = {name: [] for name in variants}
+    for _ in range(30):
+        for name, (registry, tp, cfg) in variants.items():
+            t0 = time.perf_counter()
+            anti_entropy_session(registry, local, tp, cfg)
+            samples[name].append(time.perf_counter() - t0)
+    t_off, t_null, t_on, t_audit = (
+        float(np.median(samples[name])) for name in
+        ("off", "null", "on", "audit"))
+
+    def pct(t):
+        return (t / t_off - 1.0) * 100.0
+
+    rows.append((f"session_observer_off_{shape}", t_off * 1e6, "baseline"))
+    rows.append((f"session_observer_null_{shape}", t_null * 1e6,
+                 f"null sinks attached; {pct(t_null):+.1f}% vs off"))
+    rows.append((f"session_observer_on_{shape}", t_on * 1e6,
+                 f"tracing+metrics; {pct(t_on):+.1f}% vs off (bar <=5%)"))
+    rows.append((f"session_observer_audit_{shape}", t_audit * 1e6,
+                 f"tracing+metrics+audit; {pct(t_audit):+.1f}% vs off"))
+    pol = CausalPolicy(fp_threshold=1.0).label()
+    _rec(records, "session_observer_off", shape, t_off, policy=pol,
+         transport="loopback")
+    _rec(records, "session_observer_null", shape, t_null,
+         reference="session_observer_off", speedup=t_off / t_null,
+         policy=pol, transport="loopback")
+    _rec(records, "session_observer_on", shape, t_on,
+         reference="session_observer_off", speedup=t_off / t_on,
+         policy=pol, transport="loopback")
+    _rec(records, "session_observer_audit", shape, t_audit,
+         reference="session_observer_off", speedup=t_off / t_audit,
+         policy=pol, transport="loopback")
+    return rows
+
+
 def all_benches() -> list:
     """Smaller sweep for benchmarks/run.py (the full acceptance config
     runs via ``python -m benchmarks.bench_fleet``)."""
@@ -390,6 +467,9 @@ def main(argv=None) -> None:
                    choices=["loopback", "mesh", "socket", "all"],
                    help="also bench anti-entropy sessions over this gossip "
                         "fabric (measured wire bytes land in the JSON)")
+    p.add_argument("--observe", action="store_true",
+                   help="also bench observer overhead on a loopback session "
+                        "(off vs null sinks vs full tracing+metrics)")
     p.add_argument("--json", default="BENCH_fleet.json",
                    help="machine-readable output path")
     args = p.parse_args(argv)
@@ -406,6 +486,8 @@ def main(argv=None) -> None:
         rows += bench_transports(n=n, m=m, transports=names,
                                  records=records,
                                  shards=max(args.shards, 2))
+    if args.observe:
+        rows += bench_observer(n=n, m=m, records=records)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f'{name},{us:.2f},"{derived}"')

@@ -32,7 +32,8 @@ import numpy as np
 from repro.causal.policy import CausalPolicy
 from repro.causal.results import ClassifyResult, Comparison, ComparisonMatrix
 from repro.core import clock as bc
-from repro.kernels import ops, pack
+from repro.kernels import autotune, ops, pack
+from repro.obs.observer import resolve
 
 __all__ = ["CausalEngine", "PackedSlab", "compare"]
 
@@ -101,6 +102,24 @@ class CausalEngine:
 
     def __init__(self, policy: CausalPolicy | None = None):
         self.policy = policy or CausalPolicy()
+        # instrumentation rides the policy; null sinks when absent
+        self.obs = resolve(getattr(self.policy, "observer", None))
+
+    def _record_dispatch(self, verb: str, res, n: int, span,
+                         tune0: tuple[int, int]) -> None:
+        """Span attrs + dispatch counters for one front-door call."""
+        obs = self.obs
+        span.set(engine=res.engine, n=n,
+                 blocks=dict(res.blocks) if res.blocks else None,
+                 shards=self.policy.shards)
+        obs.metrics.counter("engine_dispatch", verb=verb,
+                            engine=res.engine).inc()
+        hits = autotune.CACHE_STATS["hit"] - tune0[0]
+        misses = autotune.CACHE_STATS["miss"] - tune0[1]
+        if hits:
+            obs.metrics.counter("autotune_cache", outcome="hit").inc(hits)
+        if misses:
+            obs.metrics.counter("autotune_cache", outcome="miss").inc(misses)
 
     # ------------------------------------------------------------------
     # verb 1: one-vs-many classify
@@ -115,6 +134,23 @@ class CausalEngine:
         policy carries a mesh, promoted rows overlaid exactly) or an
         ``[N, m]`` int32 slab / batched ``BloomClock`` (int32 kernel).
         """
+        obs = self.obs
+        if not obs:
+            return self._classify(query, peers, bn=bn, bm=bm,
+                                  interpret=interpret)
+        tune0 = (autotune.CACHE_STATS["hit"], autotune.CACHE_STATS["miss"])
+        n = peers.capacity if isinstance(peers, PackedSlab) else -1
+        with obs.trace.span("causal.classify",
+                            pack="slab" if isinstance(peers, PackedSlab)
+                            else "i32") as sp:
+            res = self._classify(query, peers, bn=bn, bm=bm,
+                                 interpret=interpret)
+            if n < 0:
+                n = int(np.shape(res.sum_p)[-1])
+            self._record_dispatch("classify", res, n, sp, tune0)
+        return res
+
+    def _classify(self, query, peers, *, bn, bm, interpret) -> ClassifyResult:
         pol = self.policy
         q = _as_cells(query)
         bn = bn if bn is not None else pol.bn
@@ -174,6 +210,27 @@ class CausalEngine:
         optional pre-placed device copy (a sharded registry passes its
         mesh-placed mask so masking never re-uploads).
         """
+        obs = self.obs
+        if not obs:
+            return self._pairs(clocks, cols, alive=alive,
+                               alive_dev=alive_dev, engine=engine, bi=bi,
+                               bj=bj, bm=bm, uniform_base=uniform_base,
+                               interpret=interpret)
+        tune0 = (autotune.CACHE_STATS["hit"], autotune.CACHE_STATS["miss"])
+        with obs.trace.span("causal.pairs",
+                            pack="slab" if isinstance(clocks, PackedSlab)
+                            else "i32") as sp:
+            res = self._pairs(clocks, cols, alive=alive,
+                              alive_dev=alive_dev, engine=engine, bi=bi,
+                              bj=bj, bm=bm, uniform_base=uniform_base,
+                              interpret=interpret)
+            self._record_dispatch("pairs", res, int(np.shape(res.le)[0]),
+                                  sp, tune0)
+        return res
+
+    def _pairs(self, clocks, cols=None, *, alive=None, alive_dev=None,
+               engine=None, bi=None, bj=None, bm=None, uniform_base=None,
+               interpret=None) -> ComparisonMatrix:
         pol = self.policy
         engine = engine if engine is not None else pol.engine
         bi = bi if bi is not None else pol.bi

@@ -42,6 +42,12 @@ class CausalPolicy:
                    (``kernels.autotune``); False = built-in defaults.
     interpret      force Pallas interpret mode (None = auto: interpret
                    off-TPU so the same kernel bodies run on CPU).
+    observer       ``repro.obs.Observer`` riding the policy: every
+                   consumer (engine, registry, gossip, runtime,
+                   serving) instruments itself through it.  None (the
+                   default) means null sinks — near-zero cost.
+                   Observers hash/compare by identity, so the policy
+                   stays hashable and usable as a cache key.
     """
 
     fp_threshold: float = 1e-4
@@ -55,6 +61,7 @@ class CausalPolicy:
     bn: Optional[int] = None
     autotune: bool = True
     interpret: Optional[bool] = None
+    observer: Any = None
 
     def __post_init__(self):
         if self.engine not in _ENGINES:

@@ -253,6 +253,7 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
     from repro.fleet import monitor as fm
     from repro.fleet import registry as fr
     from repro.fleet import transport as ft
+    from repro.obs.observer import resolve
 
     if gossip_cfg is None:
         # accept-everything-comparable audit policy, threaded as a
@@ -271,6 +272,13 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
             capacity=cap, m=mm, k=kk)
     registry = registry_factory(max(8, n), m, k)
     peers = [p for p in range(n) if p != observer]
+    # the instrumentation observer (as opposed to the observer NODE
+    # above) rides the gossip config / policies; when present, every
+    # audited verdict gets its vector-clock ground truth attached
+    obs = resolve(fg_cfg.observer
+                  or (fg_cfg.policy.observer
+                      if fg_cfg.policy is not None else None)
+                  or getattr(registry.policy, "observer", None))
 
     nodes: dict = {}
     servers: list = []
@@ -322,6 +330,7 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
                 for p in peers:
                     nodes[p].set_cells(bloom[p])
             local = as_clock(bloom[observer])
+            audit_mark = len(obs.audit.records) if obs.audit else 0
             merged, report = ft.anti_entropy_session(
                 registry, local, tp, fg_cfg)
             digest_bytes += report.digest_bytes
@@ -329,6 +338,7 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
             pushback_bytes += report.pushback_bytes
 
             vo = vec[observer]
+            truth_of: dict[str, bool] = {}
             for p in peers:
                 s = registry.slot_of(pid_of[p])
                 code = int(report.view.status[s])
@@ -336,6 +346,8 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
                 o_le_p = bool(np.all(vo <= vec[p]))
                 if code == fr.FORKED:
                     quarantines += 1
+                    # a quarantine is "correct" iff truly concurrent
+                    truth_of[str(pid_of[p])] = not (p_le_o or o_le_p)
                     if p_le_o or o_le_p:
                         fn += 1      # §3 violation: can never happen
                     continue
@@ -346,8 +358,16 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
                     fr.SAME: p_le_o and o_le_p,
                     fr.DESCENDANT: o_le_p,
                 }[code]
+                truth_of[str(pid_of[p])] = truth_ok
                 if not truth_ok:
                     fp_count += 1
+
+            # annotate this round's audit records with ground truth:
+            # the trail now carries measured-vs-predicted fp natively
+            if obs.audit:
+                for rec in obs.audit.records[audit_mark:]:
+                    if rec.kind == "verdict" and rec.peer_id in truth_of:
+                        obs.audit.annotate_truth(rec, truth_of[rec.peer_id])
 
             # commit the round to BOTH clock families (receive rule)
             accept_ids = [p for p in peers
@@ -370,6 +390,11 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
 
     measured = fp_count / max(claims, 1)
     mean_pred = float(np.mean(predicted)) if predicted else 0.0
+    if obs.metrics:
+        obs.metrics.gauge("sim_measured_fp").set(measured)
+        obs.metrics.gauge("sim_mean_predicted_fp").set(mean_pred)
+        obs.metrics.gauge("sim_fp_within_band").set(
+            float(fm.fp_within_band(measured, mean_pred)))
     return GossipSimResult(
         rounds=rounds_done,
         false_negatives=fn,

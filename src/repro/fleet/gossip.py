@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Optional
+from typing import Any, Optional
 
 import numpy as np
 
@@ -54,6 +54,9 @@ class GossipConfig:
     # ``policy.fp_threshold``, so a runtime threads its CausalPolicy
     # straight through gossip
     policy: Optional[CausalPolicy] = None
+    # instrumentation override for this config; sessions fall back to
+    # ``policy.observer`` and then the registry's policy when None
+    observer: Any = None
 
     def __post_init__(self):
         if self.fp_threshold is not None:
@@ -84,6 +87,7 @@ class GossipReport:
     delta_bytes: int = 0          # MEASURED inbound delta-frame bytes
     transport: str = "loopback"   # fabric the session ran over
     shards: int = 1               # device shards the registry slab spans
+    unreachable: tuple = ()       # peers skipped mid-session (socket)
 
     @property
     def n_accepted(self) -> int:
@@ -102,6 +106,8 @@ class GossipReport:
             f"unconfident={int(self.unconfident.sum())} "
             f"alive={int(self.view.alive.sum())} "
             f"wire={self.wire_bytes}B[{self.transport}]"
+            + (f" unreachable={len(self.unreachable)}"
+               if self.unreachable else "")
         )
 
 

@@ -9,25 +9,44 @@ numpy:
   (peers i, j connected iff their clocks are ordered either way).  A
   healthy fleet is one component; every extra component is a fork —
   a set of peers whose causal histories have diverged from the rest.
+  Components run through ``scipy.sparse.csgraph`` when scipy is
+  available (the Python union-find is the fallback) — ``watch()`` calls
+  this every tick, so the O(pairs) Python loop matters.
 - **straggler mask**: alive peers whose clock sum lags the alive median
   by more than ``straggler_gap`` (clock sums are monotone progress
   counters).
-- **predicted-fp histogram**: log10-binned Eq. 3 fp over the ordered
-  pairs — the fleet's claimed-order confidence profile.  Validation
-  against a MEASURED rate needs ground truth the monitor does not have;
-  the simulator supplies it (``repro.core.sim.run_gossip_sim``) and
+- **predicted-fp histogram**: log10-binned Eq. 3 fp over the strict
+  ordered pairs — the fleet's claimed-order confidence profile.
+  Validation against a MEASURED rate needs ground truth the monitor
+  does not have; the simulator supplies it (``run_gossip_sim``) and the
+  audit trail evaluates it continuously (``repro.obs.audit``);
   ``fp_within_band`` is the shared check.
+
+``watch()`` turns the one-shot snapshot into a time series: it samples
+``fleet_health`` periodically and folds every sample into an
+``Observer``'s metrics registry (gauges + the streaming fp histogram),
+yielding each snapshot so callers can also react inline.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+from typing import Iterator, Optional
 
 import jax
 import numpy as np
 
 from repro.fleet.registry import ClockRegistry
+from repro.obs.observer import resolve
 
-__all__ = ["FleetHealth", "fleet_health", "fork_components", "fp_within_band"]
+try:
+    from scipy.sparse import csr_matrix
+    from scipy.sparse.csgraph import connected_components as _scipy_cc
+except ImportError:          # pragma: no cover - scipy ships in the image
+    _scipy_cc = None
+
+__all__ = ["FleetHealth", "fleet_health", "fork_components",
+           "fp_within_band", "record_health", "watch"]
 
 
 @dataclasses.dataclass
@@ -38,24 +57,32 @@ class FleetHealth:
     n_components: int             # fork count: healthy == 1 (or 0 if empty)
     straggler_mask: np.ndarray    # [capacity] bool
     sums: np.ndarray              # [capacity] float32 clock sums
-    fp_hist: np.ndarray           # counts per log10-fp bin (ordered pairs)
+    fp_hist: np.ndarray           # counts per log10-fp bin (strict pairs)
     fp_bin_edges: np.ndarray      # len(fp_hist) + 1 edges, log10(fp)
-    mean_predicted_fp: float      # mean Eq. 3 fp over ordered pairs
+    mean_strict_fp: float         # mean Eq. 3 fp over STRICT ordered pairs
+                                  # (dominance holds, clocks differ);
+                                  # 0.0 when no strict pair exists
     shards: int = 1               # device shards the registry slab spans
+
+    @property
+    def mean_predicted_fp(self) -> float:
+        """Back-compat alias of ``mean_strict_fp`` (the old name implied
+        all ordered pairs; the value was always strict-pairs-only)."""
+        return self.mean_strict_fp
 
     def summary(self) -> str:
         return (
             f"alive={self.n_alive} components={self.n_components} "
             f"comparable={self.comparable_fraction:.3f} "
             f"stragglers={int(self.straggler_mask.sum())} "
-            f"mean_pred_fp={self.mean_predicted_fp:.3e} "
+            f"mean_strict_fp={self.mean_strict_fp:.3e} "
             f"shards={self.shards}"
         )
 
 
-def fork_components(comparable: np.ndarray, alive: np.ndarray) -> tuple[np.ndarray, int]:
-    """Union-find over the comparability graph.  Returns (labels, count);
-    dead slots get label -1."""
+def _fork_components_py(comparable: np.ndarray,
+                        alive: np.ndarray) -> tuple[np.ndarray, int]:
+    """Pure-Python union-find fallback (O(pairs) — scipy path preferred)."""
     n = comparable.shape[0]
     parent = np.arange(n)
 
@@ -77,6 +104,31 @@ def fork_components(comparable: np.ndarray, alive: np.ndarray) -> tuple[np.ndarr
         r = find(int(i))
         labels[i] = roots.setdefault(r, len(roots))
     return labels, len(roots)
+
+
+def fork_components(comparable: np.ndarray, alive: np.ndarray) -> tuple[np.ndarray, int]:
+    """Connected components of the comparability graph over alive slots.
+
+    Returns (labels, count); dead slots get label -1.  Labels are
+    canonical — numbered by first occurrence in ascending slot order —
+    so the scipy and pure-Python paths return identical arrays.
+    """
+    alive = np.asarray(alive, bool)
+    if _scipy_cc is None:
+        return _fork_components_py(comparable, alive)
+    aidx = np.flatnonzero(alive)
+    n = comparable.shape[0]
+    labels = np.full(n, -1, np.int64)
+    if aidx.size == 0:
+        return labels, 0
+    sub = np.asarray(comparable, bool)[np.ix_(aidx, aidx)]
+    n_comp, sub_labels = _scipy_cc(csr_matrix(sub), directed=False)
+    # canonical relabel: component ids by first occurrence, matching the
+    # union-find's ascending-slot numbering bit-for-bit
+    remap: dict[int, int] = {}
+    for pos, slot in enumerate(aidx):
+        labels[slot] = remap.setdefault(int(sub_labels[pos]), len(remap))
+    return labels, int(n_comp)
 
 
 def fp_within_band(measured_fp: float, mean_predicted_fp: float,
@@ -117,7 +169,7 @@ def fleet_health(
         med = float(np.median(sums[alive]))
         straggler = alive & ((med - sums) > straggler_gap)
 
-    # ordered (strict) claims row->col: dominance holds and clocks differ
+    # strict ordered claims row->col: dominance holds and clocks differ
     strict = le & ~h.equal() & pair_mask
     fps = h.fp[strict]
     edges = np.linspace(-30.0, 0.0, fp_bins + 1)
@@ -132,6 +184,52 @@ def fleet_health(
         sums=sums,
         fp_hist=hist,
         fp_bin_edges=edges,
-        mean_predicted_fp=float(fps.mean()) if fps.size else 0.0,
+        mean_strict_fp=float(fps.mean()) if fps.size else 0.0,
         shards=registry.n_shards,
     )
+
+
+def record_health(health: FleetHealth, metrics) -> None:
+    """Fold one health snapshot into a metrics registry."""
+    metrics.gauge("fleet_alive").set(health.n_alive)
+    metrics.gauge("fleet_components").set(health.n_components)
+    metrics.gauge("fleet_comparable_fraction").set(
+        health.comparable_fraction)
+    metrics.gauge("fleet_stragglers").set(
+        int(health.straggler_mask.sum()))
+    metrics.gauge("fleet_mean_strict_fp").set(health.mean_strict_fp)
+    metrics.histogram(
+        "fleet_fp", edges=tuple(float(e) for e in health.fp_bin_edges),
+    ).add_counts(health.fp_hist)
+    metrics.counter("fleet_health_samples").inc()
+
+
+def watch(
+    registry: ClockRegistry,
+    *,
+    interval: float = 5.0,
+    samples: Optional[int] = None,
+    observer=None,
+    **health_kw,
+) -> Iterator[FleetHealth]:
+    """Periodic ``fleet_health`` sampling into an Observer's metrics.
+
+    A generator: every ``interval`` seconds (starting immediately) it
+    takes one snapshot, records it (gauges + the streaming fp histogram
+    — the confidence profile becomes a time series), and yields it, for
+    ``samples`` ticks (None = forever).  The observer resolves from the
+    argument, else the registry's policy; with neither, snapshots still
+    yield but record nowhere.
+    """
+    obs = resolve(observer if observer is not None
+                  else getattr(registry.policy, "observer", None))
+    taken = 0
+    while samples is None or taken < samples:
+        with obs.trace.span("fleet.health"):
+            health = fleet_health(registry, **health_kw)
+        record_health(health, obs.metrics)
+        taken += 1
+        yield health
+        if samples is not None and taken >= samples:
+            break
+        time.sleep(interval)

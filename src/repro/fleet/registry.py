@@ -61,6 +61,7 @@ import numpy as np
 from repro.causal import CausalEngine, CausalPolicy, PackedSlab
 from repro.core import clock as bc
 from repro.kernels import pack
+from repro.obs.observer import resolve
 from repro.sharding import FLEET_AXIS, slab_shardings
 
 __all__ = [
@@ -98,6 +99,7 @@ class FleetView:
     sums: np.ndarray          # float32 cached clock sums
     alive: np.ndarray         # bool liveness mask
     local_sum: float          # the query clock's total increments
+    engine: str = ""          # dispatch label that produced this view
 
     def slots(self, code: int) -> np.ndarray:
         return np.flatnonzero(self.status == code)
@@ -166,6 +168,7 @@ class ClockRegistry:
                 axis = base_policy.axis
         self.policy = dataclasses.replace(base_policy, mesh=mesh, axis=axis)
         self.engine = CausalEngine(self.policy)
+        self.obs = resolve(getattr(self.policy, "observer", None))
         self.mesh = mesh
         self.axis = axis if mesh is not None else None
         if mesh is not None:
@@ -259,10 +262,14 @@ class ClockRegistry:
         if len(fresh) > len(self._free):
             raise RuntimeError(
                 f"registry full: {len(fresh)} admits, {len(self._free)} free slots")
-        slots = {pid: (self._slot_of[pid] if pid in self._slot_of
-                       else self._free.pop()) for pid in peers}
-        self._slot_of.update(slots)
-        self._write(list(slots.values()), list(peers.values()))
+        with self.obs.trace.span("registry.admit", n=len(peers),
+                                 fresh=len(fresh)):
+            slots = {pid: (self._slot_of[pid] if pid in self._slot_of
+                           else self._free.pop()) for pid in peers}
+            self._slot_of.update(slots)
+            self._write(list(slots.values()), list(peers.values()))
+        self.obs.metrics.counter("registry_admits").inc(len(peers))
+        self._note_occupancy()
         return slots
 
     def admit(self, peer_id, clock: bc.BloomClock) -> int:
@@ -272,7 +279,9 @@ class ClockRegistry:
         """Overwrite existing peers' rows; one scatter for the batch."""
         if not peers:
             return
-        self._write([self._slot_of[pid] for pid in peers], list(peers.values()))
+        with self.obs.trace.span("registry.update", n=len(peers)):
+            self._write([self._slot_of[pid] for pid in peers],
+                        list(peers.values()))
 
     def update(self, peer_id, clock: bc.BloomClock) -> None:
         self.update_many({peer_id: clock})
@@ -284,13 +293,17 @@ class ClockRegistry:
         idx = [self._slot_of[pid] for pid in peer_ids]
         if not idx:
             return
-        for pid in peer_ids:
-            del self._slot_of[pid]
-        self.alive = self._place1d(self.alive.at[jnp.asarray(idx)].set(False))
-        self._alive_host[idx] = False
-        for slot in idx:
-            self._wide.pop(slot, None)
-        self._free.extend(idx)
+        with self.obs.trace.span("registry.evict", n=len(idx)):
+            for pid in peer_ids:
+                del self._slot_of[pid]
+            self.alive = self._place1d(
+                self.alive.at[jnp.asarray(idx)].set(False))
+            self._alive_host[idx] = False
+            for slot in idx:
+                self._wide.pop(slot, None)
+            self._free.extend(idx)
+        self.obs.metrics.counter("registry_evictions").inc(len(idx))
+        self._note_occupancy()
 
     def evict(self, peer_id) -> None:
         self.evict_many([peer_id])
@@ -310,12 +323,26 @@ class ClockRegistry:
         ok_h = np.asarray(ok)
         self._base_host[idx] = np.asarray(new_base)
         self._alive_host[idx] = True
+        promoted = demoted = 0
         for pos, slot in enumerate(idx):
             if ok_h[pos]:
-                self._wide.pop(slot, None)     # demotion: row packs again
+                if self._wide.pop(slot, None) is not None:
+                    demoted += 1               # demotion: row packs again
             else:                              # promotion: span > U8_MAX
+                if slot not in self._wide:
+                    promoted += 1
                 self._wide[slot] = np.asarray(logical[pos])
+        if promoted:
+            self.obs.metrics.counter("registry_promotions").inc(promoted)
+        if demoted:
+            self.obs.metrics.counter("registry_demotions").inc(demoted)
         self._mat = None
+
+    def _note_occupancy(self) -> None:
+        obs = self.obs
+        if obs:
+            obs.metrics.gauge("registry_occupancy").set(len(self._slot_of))
+            obs.metrics.gauge("registry_wide_rows").set(len(self._wide))
 
     def get(self, peer_id) -> bc.BloomClock:
         slot = self._slot_of[peer_id]
@@ -359,6 +386,7 @@ class ClockRegistry:
             sums=res.sum_p,
             alive=alive.copy(),
             local_sum=float(res.sum_q),
+            engine=res.engine or "",
         )
 
     def all_pairs(self, **kw):

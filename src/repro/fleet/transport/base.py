@@ -45,6 +45,12 @@ class Transport(abc.ABC):
         # the session pulls only peers whose advertised key differs, so
         # an unchanged fleet costs digest bytes only.
         self.have: dict = {}
+        # peer_id -> error string for peers this session could not
+        # reach.  A transport that skips-and-reports (socket) fills it
+        # per round; the session audits the entries and surfaces them
+        # on ``GossipReport.unreachable`` instead of aborting.
+        # In-process transports never populate it.
+        self.unreachable: dict = {}
 
     @abc.abstractmethod
     def digests(self) -> tuple[dict[str, wire.ClockDigest], int]:

@@ -25,8 +25,22 @@ and WHAT the node decides is shared, bit-for-bit, across fabrics:
    (the local view of the outbound half) and shipped to the accepted
    peers as ONE encoded §4 wire frame via ``transport.push``.  Reported
    bytes are the measured ``len(frame)`` costs, not an estimate.
+
+**Observability**: a session resolves its ``repro.obs.Observer`` from
+``cfg.observer`` → ``cfg.policy.observer`` → the registry's policy, and
+instruments every phase — a ``gossip.session`` span wrapping
+``gossip.digest`` / ``gossip.pull`` / ``gossip.classify`` /
+``gossip.union`` / ``gossip.push`` child spans, measured byte counters
+per phase, peer-outcome counters, a streaming log10 histogram of the
+claimed Eq. 3 fp, and an audit record for every acted-on verdict
+(accepts AND quarantines) captured BEFORE push-back overwrites the rows
+it was computed from.  Peers a non-authoritative transport reports
+unreachable are skipped, audited, and surfaced on
+``GossipReport.unreachable`` instead of aborting the round.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -35,36 +49,93 @@ from repro.core import wire
 from repro.fleet import registry as reg
 from repro.fleet.gossip import GossipConfig, GossipReport
 from repro.fleet.transport.base import Transport
+from repro.obs.observer import resolve
 
 __all__ = ["anti_entropy_session"]
 
+# log10(ms) bins for session round latency: 10µs .. 100s
+_LATENCY_EDGES = tuple(float(x) for x in np.linspace(-2.0, 5.0, 15))
 
-def _ingest_delta(registry: reg.ClockRegistry,
-                  transport: Transport) -> tuple[int, int]:
+
+def _session_observer(cfg: GossipConfig, registry: reg.ClockRegistry):
+    obs = cfg.observer
+    if obs is None and cfg.policy is not None:
+        obs = cfg.policy.observer
+    if obs is None:
+        obs = getattr(registry.policy, "observer", None)
+    return resolve(obs)
+
+
+def _ingest_delta(registry: reg.ClockRegistry, transport: Transport,
+                  obs) -> tuple[int, int]:
     """Digest exchange + delta pull into the session registry.
 
     Returns measured (digest_bytes, delta_bytes).  Peers advertised with
     an unchanged content key are skipped; vanished peers are left in the
     registry (liveness is the registry owner's policy, not the wire's).
     """
-    digests, digest_bytes = transport.digests()
+    with obs.trace.span("gossip.digest") as sp:
+        digests, digest_bytes = transport.digests()
+        sp.set(peers=len(digests), bytes=digest_bytes)
     if transport.authoritative:
         return digest_bytes, 0
     wanted = [pid for pid, d in digests.items()
               if transport.have.get(pid) != d.key]
-    if not wanted:
-        return digest_bytes, 0
-    frames, delta_bytes = transport.pull(wanted)
-    clocks = {pid: bc.from_wire(frame) for pid, frame in frames.items()}
-    known = {pid: c for pid, c in clocks.items() if pid in registry}
-    fresh = {pid: c for pid, c in clocks.items() if pid not in registry}
-    if known:
-        registry.update_many(known)
-    if fresh:
-        registry.admit_many(fresh)
-    for pid in clocks:
-        transport.have[pid] = digests[pid].key
+    with obs.trace.span("gossip.pull", wanted=len(wanted)) as sp:
+        if not wanted:
+            sp.set(bytes=0)
+            return digest_bytes, 0
+        frames, delta_bytes = transport.pull(wanted)
+        sp.set(pulled=len(frames), bytes=delta_bytes)
+        clocks = {pid: bc.from_wire(frame) for pid, frame in frames.items()}
+        known = {pid: c for pid, c in clocks.items() if pid in registry}
+        fresh = {pid: c for pid, c in clocks.items() if pid not in registry}
+        if known:
+            registry.update_many(known)
+        if fresh:
+            registry.admit_many(fresh)
+        for pid in clocks:
+            transport.have[pid] = digests[pid].key
     return digest_bytes, delta_bytes
+
+
+def _audit_verdicts(obs, registry: reg.ClockRegistry,
+                    local: bc.BloomClock, view: reg.FleetView,
+                    masks: dict, cfg: GossipConfig,
+                    transport_name: str) -> list:
+    """One audit record per acted-on verdict, captured pre-push-back."""
+    mat = np.asarray(registry._materialized())
+    local_cells = np.asarray(local.logical_cells())
+    local_crc = wire.cells_crc(local_cells)
+    local_frame = (wire.encode_clock(bc.to_wire(local))
+                   if obs.audit.store_frames else None)
+    slot_pid = {registry.slot_of(pid): pid for pid in registry.peer_ids()}
+    recs = []
+    for action, mask in masks.items():
+        for slot in np.flatnonzero(mask):
+            pid = slot_pid.get(int(slot))
+            if pid is None:
+                continue
+            peer_frame = None
+            if obs.audit.store_frames:
+                peer_frame = wire.encode_clock(
+                    bc.to_wire(registry.get(pid)))
+            recs.append(obs.audit.record(
+                "verdict", pid,
+                verdict=reg.STATUS_NAMES[int(view.status[slot])],
+                action=action,
+                fp=float(view.fp[slot]),
+                threshold=float(cfg.fp_gate),
+                engine=view.engine,
+                local_crc=local_crc,
+                peer_crc=wire.cells_crc(mat[slot]),
+                local_sum=float(view.local_sum),
+                peer_sum=float(view.sums[slot]),
+                transport=transport_name,
+                local_frame=local_frame,
+                peer_frame=peer_frame,
+            ))
+    return recs
 
 
 def anti_entropy_session(
@@ -74,42 +145,97 @@ def anti_entropy_session(
     cfg: GossipConfig = GossipConfig(),
 ) -> tuple[bc.BloomClock, GossipReport]:
     """Run one anti-entropy session; returns (merged local clock, report)."""
-    digest_bytes, delta_bytes = _ingest_delta(registry, transport)
+    obs = _session_observer(cfg, registry)
+    t0 = time.perf_counter_ns()
+    with obs.trace.span("gossip.session", transport=transport.name,
+                        shards=registry.n_shards) as sess_sp:
+        digest_bytes, delta_bytes = _ingest_delta(registry, transport, obs)
 
-    view = registry.classify_all(local)
-    alive = view.alive
+        with obs.trace.span("gossip.classify") as sp:
+            view = registry.classify_all(local)
+            sp.set(engine=view.engine, alive=int(view.alive.sum()))
+        alive = view.alive
 
-    quarantined = alive & (view.status == reg.FORKED)
+        quarantined = alive & (view.status == reg.FORKED)
 
-    stragglers = np.zeros_like(alive)
-    if alive.any():
-        med = float(np.median(view.sums[alive]))
-        stragglers = alive & ~quarantined & (
-            (med - view.sums) > cfg.straggler_gap)
+        stragglers = np.zeros_like(alive)
+        if alive.any():
+            med = float(np.median(view.sums[alive]))
+            stragglers = alive & ~quarantined & (
+                (med - view.sums) > cfg.straggler_gap)
 
-    comparable = alive & ~quarantined & ~stragglers
-    unconfident = comparable & ~view.confident(cfg.fp_gate)
-    accepted = comparable & ~unconfident
+        comparable = alive & ~quarantined & ~stragglers
+        unconfident = comparable & ~view.confident(cfg.fp_gate)
+        accepted = comparable & ~unconfident
 
-    merged = local
-    pushback_bytes = 0
-    if accepted.any():
-        merged = registry.union(accepted, local)
-        merged = bc.compress(merged)
-        if cfg.push_back:
-            snap = bc.to_wire(merged)
-            frame = wire.encode_clock(snap)
-            registry.broadcast(accepted, merged)
-            accepted_ids = [pid for pid in registry.peer_ids()
-                            if accepted[registry.slot_of(pid)]]
-            pushback_bytes = transport.push(accepted_ids, frame)
-            if not transport.authoritative:
-                # the union row is now what those peers hold (unless
-                # they tick first, which the next digest exchange sees)
-                key = wire.digest_of("", snap["cells"], snap["base"],
-                                     snap["k"]).key
-                for pid in accepted_ids:
-                    transport.have[pid] = key
+        if obs.audit:
+            _audit_verdicts(
+                obs, registry, local, view,
+                {"accept": accepted, "quarantine": quarantined}, cfg,
+                transport.name)
+
+        merged = local
+        pushback_bytes = 0
+        if accepted.any():
+            with obs.trace.span("gossip.union",
+                                n=int(accepted.sum())):
+                merged = registry.union(accepted, local)
+                merged = bc.compress(merged)
+            if cfg.push_back:
+                with obs.trace.span("gossip.push") as sp:
+                    snap = bc.to_wire(merged)
+                    frame = wire.encode_clock(snap)
+                    registry.broadcast(accepted, merged)
+                    accepted_ids = [pid for pid in registry.peer_ids()
+                                    if accepted[registry.slot_of(pid)]]
+                    pushback_bytes = transport.push(accepted_ids, frame)
+                    sp.set(peers=len(accepted_ids), bytes=pushback_bytes)
+                    if not transport.authoritative:
+                        # the union row is now what those peers hold
+                        # (unless they tick first, which the next digest
+                        # exchange sees)
+                        key = wire.digest_of("", snap["cells"],
+                                             snap["base"], snap["k"]).key
+                        for pid in accepted_ids:
+                            if pid not in transport.unreachable:
+                                transport.have[pid] = key
+
+        # peers the transport skipped-and-reported in ANY phase this
+        # round (socket connect/timeout/protocol failures): audit +
+        # metric per peer, session completed without them
+        unreachable = dict(getattr(transport, "unreachable", {}) or {})
+        for pid, err in unreachable.items():
+            obs.metrics.counter("peer_unreachable",
+                                transport=transport.name).inc()
+            obs.audit.record("peer_unreachable", pid,
+                             transport=transport.name, detail=str(err))
+
+        sess_sp.set(accepted=int(accepted.sum()),
+                    quarantined=int(quarantined.sum()),
+                    unreachable=len(unreachable))
+
+    if obs.metrics:
+        ms = (time.perf_counter_ns() - t0) / 1e6
+        obs.metrics.counter("gossip_sessions",
+                            transport=transport.name).inc()
+        obs.metrics.histogram("gossip_session_ms", edges=_LATENCY_EDGES,
+                              transport=transport.name).observe(ms)
+        for phase, nbytes in (("digest", digest_bytes),
+                              ("delta", delta_bytes),
+                              ("push", pushback_bytes)):
+            obs.metrics.counter("gossip_bytes", phase=phase).inc(nbytes)
+        for outcome, mask in (("accepted", accepted),
+                              ("quarantined", quarantined),
+                              ("stragglers", stragglers),
+                              ("unconfident", unconfident)):
+            n = int(mask.sum())
+            if n:
+                obs.metrics.counter("gossip_peers", outcome=outcome).inc(n)
+        strict = alive & np.isin(view.status,
+                                 (reg.ANCESTOR, reg.DESCENDANT))
+        if strict.any():
+            obs.metrics.histogram("fp_claimed").observe_many(
+                view.fp[strict])
 
     return merged, GossipReport(
         accepted=accepted,
@@ -122,4 +248,5 @@ def anti_entropy_session(
         delta_bytes=delta_bytes,
         transport=transport.name,
         shards=registry.n_shards,
+        unreachable=tuple(sorted(unreachable)),
     )

@@ -36,8 +36,8 @@ import numpy as np
 from repro.core import wire
 from repro.fleet.transport.base import Transport
 
-__all__ = ["ClockNode", "ClockPeerServer", "SocketTransport",
-           "TransportError"]
+__all__ = ["ClockNode", "ClockPeerServer", "PeerRejected",
+           "SocketTransport", "TransportError"]
 
 PROTO_VERSION = 1
 MSG_DIGEST, MSG_PULL, MSG_PUSH, MSG_ACK, MSG_ERR = 1, 2, 3, 4, 255
@@ -48,6 +48,13 @@ _MAX_PAYLOAD = 64 * 1024 * 1024
 
 class TransportError(RuntimeError):
     """A peer answered with an error or spoke a different protocol."""
+
+
+class PeerRejected(TransportError):
+    """The peer is ALIVE and explicitly refused the request (an
+    ``MSG_ERR`` answer — e.g. a corrupted or wrong-shape frame we
+    pushed).  Never treated as unreachability: the frame is our bug,
+    so sessions let it propagate instead of skip-and-report."""
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
@@ -191,8 +198,19 @@ class SocketTransport(Transport):
 
     ``peers`` maps peer_id -> (host, port).  Connections are
     per-request (the payloads are one frame each); ``timeout`` guards
-    every socket operation so a hung peer fails the session loudly
-    instead of stalling it.
+    every socket operation so a hung peer cannot stall the session.
+
+    Unreachable peers are **skipped and reported**, not fatal: a
+    connection-level failure on one peer (connect refused, timeout,
+    closed mid-message, version/type confusion) records it (with the
+    error) in ``self.unreachable`` and the phase continues with the
+    remaining peers — a dead peer costs its timeout, never the round.
+    An explicit ``MSG_ERR`` rejection (:class:`PeerRejected` — the peer
+    is alive and says OUR frame is bad) still raises.
+    ``unreachable`` resets at the next ``digests()`` call, so each
+    session sees only its own round's skips; the session protocol turns
+    the entries into ``peer_unreachable`` audit/metric events and
+    surfaces them on ``GossipReport.unreachable``.
     """
 
     name = "socket"
@@ -203,6 +221,9 @@ class SocketTransport(Transport):
         self.peers = {str(pid): tuple(addr) for pid, addr in peers.items()}
         self.timeout = timeout
 
+    def _mark_unreachable(self, pid: str, err: Exception) -> None:
+        self.unreachable[pid] = f"{type(err).__name__}: {err}"
+
     def _request(self, pid: str, msg_type: int,
                  payload: bytes = b"") -> bytes:
         host, port = self.peers[pid]
@@ -211,7 +232,7 @@ class SocketTransport(Transport):
             _send_msg(sock, msg_type, payload)
             kind, reply = _recv_msg(sock)
         if kind == MSG_ERR:
-            raise TransportError(
+            raise PeerRejected(
                 f"peer {pid!r} at {host}:{port} rejected the request: "
                 f"{reply.decode(errors='replace')}")
         if kind != msg_type and not (msg_type == MSG_PUSH
@@ -221,24 +242,44 @@ class SocketTransport(Transport):
         return reply
 
     def digests(self) -> tuple[dict[str, wire.ClockDigest], int]:
+        self.unreachable = {}      # fresh skip list per session round
         digs, nbytes = {}, 0
         for pid in self.peers:
-            reply = self._request(pid, MSG_DIGEST)
-            digs[pid] = wire.decode_digest(reply)
-            nbytes += len(reply)
+            try:
+                reply = self._request(pid, MSG_DIGEST)
+                digs[pid] = wire.decode_digest(reply)
+                nbytes += len(reply)
+            except PeerRejected:
+                raise
+            except (OSError, wire.WireFormatError, TransportError) as e:
+                self._mark_unreachable(pid, e)
         return digs, nbytes
 
     def pull(self, peer_ids) -> tuple[dict[str, bytes], int]:
         frames, nbytes = {}, 0
         for pid in peer_ids:
-            frame = self._request(pid, MSG_PULL)
-            frames[pid] = frame
-            nbytes += len(frame)
+            if pid in self.unreachable:
+                continue
+            try:
+                frame = self._request(pid, MSG_PULL)
+                frames[pid] = frame
+                nbytes += len(frame)
+            except PeerRejected:
+                raise
+            except (OSError, TransportError) as e:
+                self._mark_unreachable(pid, e)
         return frames, nbytes
 
     def push(self, peer_ids, frame: bytes) -> int:
         sent = 0
         for pid in peer_ids:
-            self._request(pid, MSG_PUSH, frame)
-            sent += len(frame)
+            if pid in self.unreachable:
+                continue
+            try:
+                self._request(pid, MSG_PUSH, frame)
+                sent += len(frame)     # counted only on ack'd delivery
+            except PeerRejected:
+                raise
+            except (OSError, TransportError) as e:
+                self._mark_unreachable(pid, e)
         return sent

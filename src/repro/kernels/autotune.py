@@ -92,9 +92,16 @@ def key_for(op: str, N: int, M: int, m: int, interpret: bool) -> str:
     return f"{op}|{_backend(interpret)}|N{_bucket(N)}|M{_bucket(M)}|m{_bucket(m)}"
 
 
+# running hit/miss tally for the measured-table consults; the obs
+# metrics layer snapshots this around each front-door dispatch
+CACHE_STATS = {"hit": 0, "miss": 0}
+
+
 def lookup(op: str, N: int, M: int, m: int, interpret: bool) -> dict | None:
     """Best known config for this op/shape band, or None."""
-    return load_table().get(key_for(op, N, M, m, interpret))
+    cfg = load_table().get(key_for(op, N, M, m, interpret))
+    CACHE_STATS["hit" if cfg is not None else "miss"] += 1
+    return cfg
 
 
 # ---------------------------------------------------------------------------

@@ -131,6 +131,49 @@ def _wait_port_file(path: str, timeout: float = 90.0) -> tuple[str, int]:
     raise TimeoutError(f"peer never wrote {path}")
 
 
+def _check_trace(obs, trace_dir: str, rounds: int, replay_policy) -> list:
+    """Post-run observability assertions for the smoke driver: the trace
+    parses, every round produced one complete session span with its
+    phase children, the Chrome export writes, and the audit trail's
+    frame replay matches the live verdicts bit-for-bit."""
+    import json
+
+    from repro.obs import export as obs_export
+
+    failures = []
+    obs.flush()
+    spans = obs_export.load_spans(os.path.join(trace_dir, "trace.jsonl"))
+    sessions = [s for s in spans if s["name"] == "gossip.session"]
+    if len(sessions) != rounds:
+        failures.append(
+            f"trace has {len(sessions)} gossip.session spans, "
+            f"expected one per round ({rounds})")
+    for sess in sessions:
+        kids = {s["name"] for s in spans if s["parent"] == sess["sid"]}
+        missing = {"gossip.digest", "gossip.pull",
+                   "gossip.classify"} - kids
+        if missing:
+            failures.append(
+                f"session span {sess['sid']} missing phase children "
+                f"{sorted(missing)}")
+    names = {s["name"] for s in spans}
+    for phase in ("gossip.digest", "gossip.pull", "gossip.classify",
+                  "gossip.union", "gossip.push"):
+        if phase not in names:
+            failures.append(f"trace never recorded a {phase} span")
+    chrome_path = os.path.join(trace_dir, "trace.chrome.json")
+    with open(chrome_path, "w") as f:
+        json.dump(obs_export.to_chrome(spans), f)
+    replay = obs.audit.replay_frames(policy=replay_policy)
+    if replay.checked == 0 or not replay.ok:
+        failures.append(f"audit frame replay failed: {replay.summary()}")
+    if not failures:
+        print(f"[leader] trace OK: {len(spans)} spans, "
+              f"{len(sessions)} sessions, chrome export at {chrome_path}; "
+              f"audit {replay.summary()}", flush=True)
+    return failures
+
+
 def _smoke(args) -> int:
     from repro.causal import CausalPolicy
     from repro.core import wire
@@ -138,6 +181,7 @@ def _smoke(args) -> int:
     from repro.fleet.registry import ClockRegistry
     from repro.fleet.transport import SocketTransport
     from repro.fleet.transport.session import anti_entropy_session
+    from repro.obs import Observer
 
     n, m, k, events = args.smoke, args.m, args.k, args.events
     children, peers = [], {}
@@ -163,10 +207,15 @@ def _smoke(args) -> int:
                          for pid, (h, p) in addresses.items()), flush=True)
 
         leader = _ticked_clock(m, k, events)
-        registry = ClockRegistry(capacity=max(8, n), m=m, k=k)
+        policy = CausalPolicy(fp_threshold=1.0)
+        obs = None
+        if args.trace_dir:
+            obs = Observer.to_dir(args.trace_dir)
+            policy = dataclasses.replace(policy, observer=obs)
+        registry = ClockRegistry(capacity=max(8, n), m=m, k=k,
+                                 policy=policy)
         transport = SocketTransport(addresses, timeout=10.0)
-        cfg = GossipConfig(policy=CausalPolicy(fp_threshold=1.0),
-                           straggler_gap=np.inf)
+        cfg = GossipConfig(policy=policy, straggler_gap=np.inf)
 
         reports = []
         merged = leader
@@ -194,6 +243,11 @@ def _smoke(args) -> int:
         if stragglers:
             failures.append(f"fleet did not converge: {sorted(stragglers)} "
                             "disagree with the union")
+        if obs is not None:
+            failures.extend(_check_trace(
+                obs, args.trace_dir, args.rounds,
+                CausalPolicy(fp_threshold=1.0)))
+            obs.close()
         if failures:
             for f in failures:
                 print(f"[leader] FAIL: {f}", flush=True)
@@ -229,6 +283,11 @@ def main(argv=None) -> int:
                     help="child mode: tick this causal event prefix")
     ap.add_argument("--port-file", type=str, default=None,
                     help="child mode: write the bound host:port here")
+    ap.add_argument("--trace-dir", type=str, default=None,
+                    help="driver mode: record spans/metrics/audit under "
+                         "this directory and assert the trace is complete "
+                         "(trace.jsonl, trace.chrome.json, metrics.json, "
+                         "audit.jsonl)")
     args = ap.parse_args(argv)
     if (args.serve is None) == (args.smoke is None):
         ap.error("pick exactly one of --serve / --smoke")

@@ -12,6 +12,7 @@ gossip fleet: after serving it runs one anti-entropy session over a
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -37,7 +38,17 @@ def main():
                     help="gossip fleet peers, 'id@host:port,...' "
                          "(repro.launch.peers serves them)")
     ap.add_argument("--replica-id", type=str, default="replica0")
+    ap.add_argument("--trace-dir", type=str, default=None,
+                    help="record spans/metrics/audit for this run under "
+                         "this directory (see repro.obs)")
     args = ap.parse_args()
+
+    obs = None
+    policy = CausalPolicy(fp_threshold=1e-4)
+    if args.trace_dir:
+        from repro.obs import Observer
+        obs = Observer.to_dir(args.trace_dir)
+        policy = dataclasses.replace(policy, observer=obs)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -46,7 +57,7 @@ def main():
         ServeConfig(max_batch=args.batch,
                     max_seq=args.prompt_len + args.gen + 8,
                     temperature=args.temperature, seed=args.seed),
-        ClockConfig(policy=CausalPolicy(fp_threshold=1e-4)))
+        ClockConfig(policy=policy))
 
     key = jax.random.PRNGKey(args.seed + 1)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
@@ -72,6 +83,11 @@ def main():
         print(f"[serve] gossip[{report.transport}] {report.summary()}")
         print(f"[serve] post-gossip clock sum: "
               f"{float(engine.clock.clock.sum()):.0f}")
+
+    if obs is not None:
+        obs.close()
+        print(f"[serve] trace written to {args.trace_dir} "
+              "(trace.jsonl, metrics.json, audit.jsonl)")
 
 
 if __name__ == "__main__":

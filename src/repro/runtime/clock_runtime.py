@@ -90,11 +90,19 @@ class CheckpointLineage:
 
 
 class ClockRuntime:
-    def __init__(self, cfg: ClockConfig, run_id: str = "run0"):
+    def __init__(self, cfg: ClockConfig, run_id: str = "run0",
+                 observer=None):
         self.cfg = cfg
         self.run_id = run_id
         self.policy = cfg.causal_policy()
+        if observer is not None:
+            # thread the instrumentation rider through the policy: the
+            # engine below, every make_registry() slab and every
+            # gossip() session inherit it with no further arguments
+            self.policy = dataclasses.replace(self.policy,
+                                              observer=observer)
         self.causal = CausalEngine(self.policy)
+        self.obs = self.causal.obs
         self.clock = bc.zeros(cfg.m, cfg.k)
         self.history = hist.init(cfg.history_window, cfg.m, cfg.k)
 

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import clock as bc
+from repro.core import wire
 from repro.fleet.registry import ClockRegistry
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
@@ -64,6 +65,40 @@ class ServingEngine:
             policy=self.clock.policy)
         self._session_order: list = []
         self._session_seq = 0
+        # instrumentation rides the clock policy (see repro.obs)
+        self.obs = self.clock.obs
+
+    def _audit_adopt(self, sid, session: dict, verdict: str, ok: bool,
+                     fp: float, engine: str) -> None:
+        """Audit one migration verdict the engine acted on."""
+        obs = self.obs
+        if not obs.audit:
+            return
+        local_cells = np.asarray(self.clock.clock.logical_cells())
+        peer_cells = np.asarray(session["clock"].clock.logical_cells())
+        frames = {}
+        if obs.audit.store_frames:
+            frames = {
+                "local_frame": wire.encode_clock(bc.to_wire(self.clock.clock)),
+                "peer_frame": wire.encode_clock(
+                    bc.to_wire(session["clock"].clock)),
+            }
+        obs.audit.record(
+            "verdict", sid,
+            verdict=verdict,
+            action="adopt" if ok else "reject",
+            fp=fp,
+            threshold=float(self.clock.policy.fp_threshold),
+            engine=engine,
+            local_crc=wire.cells_crc(local_cells),
+            peer_crc=wire.cells_crc(peer_cells),
+            local_sum=float(local_cells.sum()),
+            peer_sum=float(peer_cells.sum()),
+            transport="serving",
+            **frames)
+        obs.metrics.counter(
+            "serving_adoptions",
+            outcome="adopted" if ok else "rejected").inc()
 
     def _register_session(self, sid, clock) -> None:
         if sid not in self.sessions:
@@ -139,6 +174,8 @@ class ServingEngine:
 
     def adopt(self, session: dict) -> bool:
         ok, status, fp = self.can_adopt(session)
+        self._audit_adopt(session.get("sid") or "migrating", session,
+                          status, ok, fp, "merge_compare")
         if ok:
             self.clock.clock = bc.merge(self.clock.clock, session["clock"].clock)
             sid = session.get("sid") or f"migrated/s{self._session_seq}"
@@ -164,6 +201,17 @@ class ServingEngine:
         # session ≼ replica (its KV snapshot is from our causal past)
         # with Eq.-3 confidence — same rule as can_adopt, batched
         ok = res.after() & (res.fp_after() <= self.clock.policy.fp_threshold)
+        if self.obs.audit:
+            equal = res.after() & res.before()
+            for i, s in enumerate(sessions):
+                verdict = ("same" if equal[i]
+                           else "ancestor" if res.after()[i]
+                           else "descendant" if res.before()[i]
+                           else "forked")
+                self._audit_adopt(
+                    s.get("sid") or f"migrating/{i}", s, verdict,
+                    bool(ok[i]), float(res.fp_after()[i]),
+                    res.engine or "i32")
         if ok.any():
             merged = jnp.maximum(
                 self.clock.clock.logical_cells(),

@@ -155,7 +155,7 @@ def test_fleet_health_sharded_matches(host_devices):
     assert got.comparable_fraction == ref.comparable_fraction
     np.testing.assert_array_equal(got.component, ref.component)
     np.testing.assert_array_equal(got.fp_hist, ref.fp_hist)
-    assert got.mean_predicted_fp == ref.mean_predicted_fp
+    assert got.mean_strict_fp == ref.mean_strict_fp
     assert got.shards == 4 and ref.shards == 1
     assert "shards=4" in got.summary()
     # engine hints that are valid unsharded stay valid sharded (the ring
