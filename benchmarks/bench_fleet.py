@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
@@ -53,6 +54,23 @@ def _time(fn, n: int = 3) -> float:
     for _ in range(n):
         jax.block_until_ready(jax.tree.leaves(fn()))
     return (time.perf_counter() - t0) / n
+
+
+def _time_interleaved(fns: dict, reps: int = 5) -> dict:
+    """Round-robin the callables and return per-name MEDIAN seconds.
+
+    Used wherever a record is a ratio of two timings (sharded vs
+    1-shard): machine drift moves interleaved samples together, so the
+    ratio compares like with like instead of whichever ran first."""
+    for fn in fns.values():                # warm / compile
+        jax.block_until_ready(jax.tree.leaves(fn()))
+    samples: dict = {name: [] for name in fns}
+    for _ in range(reps):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(jax.tree.leaves(fn()))
+            samples[name].append(time.perf_counter() - t0)
+    return {name: float(np.median(ts)) for name, ts in samples.items()}
 
 
 def _engine_of(res) -> str | None:
@@ -212,11 +230,15 @@ def bench_sharded(n: int, m: int, shards: int,
     _rec(records, "classify_all_sharded", shape, ts,
          reference="classify_all_1shard", speedup=t1 / ts, shards=shards,
          policy=reg.policy.label(), engine=cls_eng)
-    t1 = _time(lambda: ref.all_pairs()["a_le_b"], n=1)
-    ts = _time(lambda: reg.all_pairs()["a_le_b"], n=1)
+    t = _time_interleaved({
+        "one": lambda: ref.all_pairs()["a_le_b"],
+        "sharded": lambda: reg.all_pairs()["a_le_b"],
+    }, reps=7)
+    t1, ts = t["one"], t["sharded"]
     ring_eng = _engine_of(reg.all_pairs())
+    strategy = ops.LAST_DISPATCH.get("strategy")
     rows.append((f"all_pairs_sharded{shards}_{shape}", ts * 1e6,
-                 f"halved ppermute ring, bit-identical; "
+                 f"strategy={strategy}, bit-identical; "
                  f"1-device {t1 * 1e6:.0f}us"))
     _rec(records, "all_pairs_ring", shape, ts,
          reference="all_pairs_1shard", speedup=t1 / ts, shards=shards,
@@ -446,6 +468,61 @@ def bench_observer(n: int = 256, m: int = 512,
     return rows
 
 
+def check_against(baseline_path: str, records: list,
+                  tolerance: float = 0.15) -> list:
+    """Compare this run against a recorded baseline; return failures.
+
+    Records are matched on (op, shape, shards, transport).  A matched
+    op FAILS when it got more than ``tolerance`` slower than the
+    baseline (ratio test, plus a 1 ms absolute floor so micro-timings
+    can't flake the gate on scheduler noise).  Ops present only on one
+    side are ignored — the gate guards regressions in EXISTING ops, it
+    doesn't pin the bench roster.  Transport sessions (socket spawns
+    real processes, loopback/mesh sessions ride thread scheduling) sit
+    well above a 15% noise floor run-to-run, so only pure compute
+    records (``transport is None``) are gated.
+
+    Absolute wall time is NOT comparable across machines (CI runners
+    vary ~2x) or even across a long benching session on one box
+    (sustained-load throttling).  When both runs carry the
+    ``comparability_matrix`` reference at a shape, its old/new ratio is
+    used as a per-shape calibration factor — the gate then measures how
+    much an op slowed *relative to the dense reference on the same
+    machine state*, which is what a code regression actually looks
+    like."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+
+    def key(r):
+        return (r["op"], r["shape"], r.get("shards", 1), r.get("transport"))
+
+    current = {key(r): r for r in records}
+    cal = {}
+    for old in baseline.get("records", []):
+        if old["op"] != "comparability_matrix" or not old.get("ms"):
+            continue
+        new = current.get(key(old))
+        if new is not None and new.get("ms"):
+            cal[old["shape"]] = old["ms"] / new["ms"]
+    failures = []
+    for old in baseline.get("records", []):
+        if not old.get("ms") or old.get("transport") is not None:
+            continue
+        if old["op"] == "comparability_matrix":
+            continue  # the calibration anchor is never gated
+        new = current.get(key(old))
+        if new is None or not new.get("ms"):
+            continue
+        c = cal.get(old["shape"], 1.0)
+        ratio = new["ms"] * c / old["ms"]
+        if ratio > 1.0 + tolerance and new["ms"] * c - old["ms"] > 1.0:
+            failures.append(
+                f"{'|'.join(str(p) for p in key(old))}: "
+                f"{old['ms']:.2f}ms -> {new['ms']:.2f}ms "
+                f"(calibrated {ratio:.2f}x, tolerance {1.0 + tolerance:.2f}x)")
+    return failures
+
+
 def all_benches() -> list:
     """Smaller sweep for benchmarks/run.py (the full acceptance config
     runs via ``python -m benchmarks.bench_fleet``)."""
@@ -472,6 +549,11 @@ def main(argv=None) -> None:
                         "(off vs null sinks vs full tracing+metrics)")
     p.add_argument("--json", default="BENCH_fleet.json",
                    help="machine-readable output path")
+    p.add_argument("--check-against", default=None, metavar="BASELINE",
+                   help="compare against a recorded BENCH_fleet.json and "
+                        "exit nonzero if any existing op got >15%% slower")
+    p.add_argument("--check-tolerance", type=float, default=0.15,
+                   help="allowed fractional slowdown for --check-against")
     args = p.parse_args(argv)
     n, m = (256, 512) if args.quick else (1024, 1024)
     records: list = []
@@ -497,6 +579,16 @@ def main(argv=None) -> None:
                    "records": records}, f, indent=1)
         f.write("\n")
     print(f"# wrote {len(records)} records -> {args.json}")
+    if args.check_against:
+        failures = check_against(args.check_against, records,
+                                 tolerance=args.check_tolerance)
+        if failures:
+            print(f"# REGRESSION vs {args.check_against}:", file=sys.stderr)
+            for line in failures:
+                print(f"#   {line}", file=sys.stderr)
+            sys.exit(1)
+        print(f"# no regressions vs {args.check_against} "
+              f"(tolerance {args.check_tolerance:.0%})")
 
 
 if __name__ == "__main__":

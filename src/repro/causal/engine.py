@@ -275,9 +275,14 @@ class CausalEngine:
         if uniform_base is None:
             uniform_base = self._uniform_base(slab, alive)
         if pol.mesh is not None:
+            # mesh placement only matters when the bulk is combined with
+            # sharded masks/overlays below; the fully-alive packed fast
+            # path returns it as-is, so the replicated strategy may skip
+            # its output reshard
             bulk = ops._compare_matrix_packed_sharded(
                 slab.cells_u8, slab.base, mesh=pol.mesh, axis=pol.axis,
-                uniform_base=uniform_base, use_autotune=pol.autotune, **kw)
+                uniform_base=uniform_base, use_autotune=pol.autotune,
+                mesh_outputs=not (aidx.size == cap and slab.packed), **kw)
             eng, blocks = _dispatch_label("ring_full")
             if aidx.size == cap and slab.packed:
                 return ComparisonMatrix.from_dict(bulk, engine=eng,

@@ -1,605 +1,75 @@
-"""Pallas TPU kernels: bulk bloom-clock comparison (one-vs-many, N x N).
+"""Bulk bloom-clock comparison engines (template-emitted; see below).
 
-The fleet layer (``repro.fleet``) never compares clocks one pair at a
-time: a gossip round classifies EVERY peer against the local clock, and
-the fleet monitor classifies EVERY pair.  Done with the broadcast
-reference (``repro.core.clock.comparability_matrix``) that is an
-O(n^2 * m) materialization — at n = m = 1024 that is three 4 GB
-intermediates for what is fundamentally a streaming reduction.  These
-kernels tile the reduction instead:
+Since PR 7 every engine here is an INSTANCE of the parameterized
+compare-kernel template (``kernels.template``), emitted by name in
+``kernels.generate``; this module re-exports them under their historical
+names so existing imports keep working.  The hand-rolled kernel bodies
+that used to live here were deleted after each emitted instance was
+pinned bit-identical (flags, Eq. 3 fp bits, per-row bases) against a
+verbatim copy of the old code — the pins live in
+``tests/test_template.py``.
 
-``bloom_one_vs_many_kernel``
-    grid (N/bn, m/bm); compares one query clock against bn peers per
-    step.  Same revisited-output pattern as ``bloom_compare.py``:
-    dominance flags AND-accumulate and sums ADD-accumulate across
-    m-tiles into per-peer [bn, 2] outputs, and the Eq. 3 fp rates (both
-    directions) are finalized with log1p/expm1-stable math on the last
-    m-tile.  One HBM read of the peer slab total.
+What the engines compute (the design, shared by every instance):
 
-``bloom_matrix_kernel``
-    grid (N/bi, M/bj, m/bm); tiled all-pairs compare.  Per step it holds
-    one [bi, bm] row tile and one [bj, bm] column tile in VMEM and
-    AND-accumulates the [bi, bj] dominance flags across m-tiles
-    (innermost grid axis -> consecutive revisits).  Row sums are
-    ADD-accumulated in-kernel on the j == 0 stripe only (the [bi, 1]
-    output block stays live for the whole i-row of the grid, so the
-    stripe completes before any finalize step of that row needs it).
-    Column sums cannot be accumulated the same way — their block would
-    be revisited non-consecutively across i — so they arrive as a cheap
-    precomputed input (the fleet registry caches per-clock sums
-    anyway).  Eq. 3 fp(row -> col) is finalized on the last m-tile as
-    the outer product of the stable-log factors.
+``bloom_one_vs_many_pallas`` / ``bloom_one_vs_many_packed_pallas``
+    grid (N/bn, m/bm); one query clock vs bn peers per step.  Dominance
+    flags AND-accumulate and sums ADD-accumulate across m-tiles into
+    per-peer [bn, 2] outputs; the Eq. 3 fp rates (both directions) are
+    finalized with log1p/expm1-stable math on the last m-tile.  One HBM
+    read of the peer slab total; the packed variant reads u8 residuals
+    and widens in VMEM (+ per-slot int32 base).
 
-Both kernels read each operand tile exactly once; flags are exact
-(bit-identical to the reference), fp is the same f32 expression the
-reference evaluates.
-
-Packed-slab engines (the quantized fast paths — see ``kernels.pack``):
+``bloom_matrix_pallas``
+    grid (N/bi, M/bj, m/bm); tiled all-pairs int32 compare with in-kernel
+    row sums (accumulated on the j == 0 stripe) and Eq. 3 fp(row -> col)
+    finalized as the outer product of stable-log factors; column sums
+    arrive as a cheap precomputed input.
 
 ``bloom_matrix_tri_pallas``
-    symmetric all-pairs over ONE u8 slab.  Because ``ge(i, j) ==
-    le(j, i)``, only the block-upper-triangle is swept (scalar-prefetched
-    block index lists drive the grid), and each visited tile computes
-    BOTH directions from a single int16 difference: ``le = max(d) <= 0``,
-    ``ge = min(d) >= 0``.  Half the pairs, one pairwise intermediate
-    instead of two, u8 HBM reads: ~4x less traffic than the int32
-    kernel.  The wrapper mirrors the missing triangle by transposition.
+    symmetric all-pairs over ONE u8 slab.  ``ge(i, j) == le(j, i)``, so
+    only the block-upper-triangle is swept (scalar-prefetched block index
+    lists drive the grid) and each tile computes BOTH directions from a
+    single int16 difference: ``le = max(d) <= 0``, ``ge = min(d) >= 0``.
+    Half the pairs, one pairwise intermediate, u8 HBM reads.
 
 ``bloom_matrix_packed_pallas``
-    the same single-difference formulation on a full rectangle, for
-    rows != cols.
+    the same single-difference formulation on a full rectangle.
 
 ``bloom_matrix_mxu_pallas``
-    the MXU formulation of the dominance reduction: per-pair violation
-    counts ``sum_m relu(a - b)`` computed as ONE ``jax.lax.dot_general``
-    per tile via thermometer encoding — ``relu(a - b) = #{t : b < t <=
-    a}``, so ``A[i, (m, t)] = a_im >= t`` against ``B[j, (m, t)] = b_jm
-    < t`` contracts to exactly the violation count.  A pair is ``le``
-    iff its count is zero; the opposite direction is the rank-1 identity
-    ``viol_ge = viol_le - rowsum + colsum`` (no second pass).  Exact in
-    f32 (counts <= m * T << 2^24).  FLOPs scale with the value span T,
-    so the wrapper only selects this engine for narrow windows — the
-    regime §4 promises.
+    MXU formulation: per-pair violation counts ``sum_m relu(a - b)`` as
+    ONE ``dot_general`` per tile via thermometer encoding; ``le`` iff the
+    count is zero, opposite direction by the rank-1 identity with row/col
+    sums.  Exact in f32 (counts <= m * T << 2^24); selected only for
+    narrow value spans (the regime §4 promises).
 
-Per-row bases (window offsets) are honored in all packed engines: either
-folded in as a clipped [bi, bj] delta (clipping at ±(U8_MAX + 1) cannot
-change a verdict since residual differences are bounded by U8_MAX) or as
-a per-row shift before encoding.  Padded lanes are masked in-kernel
-where bases make zero-padding non-neutral.
+Per-row bases (window offsets) are honored in all packed engines: folded
+in as a clipped [bi, bj] delta (clipping at ±(U8_MAX + 1) cannot change
+a verdict since residual differences are bounded by U8_MAX) or as a
+per-row shift before encoding; padded lanes are masked in-kernel where
+bases make zero-padding non-neutral.
 
-These kernels are also the per-shard building blocks of the mesh-sharded
+These engines are also the per-shard building blocks of the mesh-sharded
 registry paths (``ops.classify_vs_many_packed_sharded`` /
-``ops.compare_matrix_packed_sharded``): shard_map runs the one-vs-many
-kernel on each [N/d, m] row shard, and the all-pairs ring feeds each
-visiting column shard through ``bloom_matrix_packed_pallas`` one
-[N/d, N/d] tile at a time.  Nothing in the kernel bodies is
+``ops.compare_matrix_packed_sharded``).  Nothing in the kernel bodies is
 placement-aware — flags are exact, so sharded results stay bit-identical
 to the single-device sweeps.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.generate import (
+    bloom_matrix_mxu_pallas,
+    bloom_matrix_packed_pallas,
+    bloom_matrix_pallas,
+    bloom_matrix_tri_pallas,
+    bloom_one_vs_many_packed_pallas,
+    bloom_one_vs_many_pallas,
+)
 
 __all__ = [
-    "bloom_one_vs_many_kernel",
     "bloom_one_vs_many_pallas",
     "bloom_one_vs_many_packed_pallas",
-    "bloom_matrix_kernel",
     "bloom_matrix_pallas",
     "bloom_matrix_tri_pallas",
     "bloom_matrix_packed_pallas",
     "bloom_matrix_mxu_pallas",
 ]
-
-
-def bloom_one_vs_many_kernel(
-    q_ref, p_ref,
-    flags_ref, sums_ref, fp_ref,
-    *, n_mtiles: int, m: int,
-):
-    j = pl.program_id(1)
-    q = q_ref[...]            # [1, bm] int32 query tile (broadcasts over rows)
-    p = p_ref[...]            # [bn, bm] int32 peer tiles
-
-    le = jnp.all(q <= p, axis=1, keepdims=True)          # [bn, 1] q <= peer
-    ge = jnp.all(q >= p, axis=1, keepdims=True)          # [bn, 1] peer <= q
-    sp = jnp.sum(p, axis=1, keepdims=True).astype(jnp.float32)
-    sq = jnp.broadcast_to(
-        jnp.sum(q, axis=1, keepdims=True).astype(jnp.float32), sp.shape)
-
-    @pl.when(j == 0)
-    def _init():
-        flags_ref[...] = jnp.concatenate([le, ge], axis=1).astype(jnp.int32)
-        sums_ref[...] = jnp.concatenate([sq, sp], axis=1)
-
-    @pl.when(j > 0)
-    def _acc():
-        cur = jnp.concatenate([le, ge], axis=1).astype(jnp.int32)
-        flags_ref[...] = flags_ref[...] & cur
-        sums_ref[...] = sums_ref[...] + jnp.concatenate([sq, sp], axis=1)
-
-    @pl.when(j == n_mtiles - 1)
-    def _finalize():
-        s = sums_ref[...]                     # [bn, 2] total Σq, Σp
-        log_q = jnp.log1p(-1.0 / m)
-        inner_p = jnp.clip(-jnp.expm1(s[:, 1:2] * log_q), 1e-30, 1.0)
-        inner_q = jnp.clip(-jnp.expm1(s[:, 0:1] * log_q), 1e-30, 1.0)
-        fp_qp = jnp.exp(s[:, 0:1] * jnp.log(inner_p))   # P(q ⊆ p by chance)
-        fp_pq = jnp.exp(s[:, 1:2] * jnp.log(inner_q))
-        fp_ref[...] = jnp.concatenate([fp_qp, fp_pq], axis=1)
-
-
-@functools.partial(jax.jit, static_argnames=("bn", "bm", "m_true", "interpret"))
-def bloom_one_vs_many_pallas(
-    q: jax.Array,        # [1, m] int32, padded: m % bm == 0
-    peers: jax.Array,    # [N, m] int32, N % bn == 0
-    *,
-    bn: int = 8,
-    bm: int = 512,
-    m_true: int | None = None,
-    interpret: bool = False,
-):
-    N, m = peers.shape
-    assert q.shape == (1, m) and m % bm == 0 and N % bn == 0
-    n_mtiles = m // bm
-    grid = (N // bn, n_mtiles)
-    kernel = functools.partial(
-        bloom_one_vs_many_kernel, n_mtiles=n_mtiles, m=m_true if m_true else m
-    )
-    flags, sums, fp = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bm), lambda i, j: (0, j)),
-            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bn, 2), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, 2), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, 2), lambda i, j: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((N, 2), jnp.int32),
-            jax.ShapeDtypeStruct((N, 2), jnp.float32),
-            jax.ShapeDtypeStruct((N, 2), jnp.float32),
-        ],
-        interpret=interpret,
-    )(q, peers)
-    return flags, sums, fp
-
-
-def bloom_matrix_kernel(
-    a_ref, b_ref, bsums_ref,
-    le_ref, ge_ref, asums_ref, fp_ref,
-    *, n_mtiles: int, m: int,
-):
-    j = pl.program_id(1)      # column-tile index
-    jm = pl.program_id(2)     # m-tile index (innermost -> revisits outputs)
-    a = a_ref[...]            # [bi, bm] int32 row clocks
-    b = b_ref[...]            # [bj, bm] int32 column clocks
-
-    # pairwise dominance on this m-tile: [bi, bj]
-    le = jnp.all(a[:, None, :] <= b[None, :, :], axis=2)
-    ge = jnp.all(a[:, None, :] >= b[None, :, :], axis=2)
-    sa = jnp.sum(a, axis=1, keepdims=True).astype(jnp.float32)  # [bi, 1]
-
-    # row sums: the (i, 0) block is live for the entire i-row of the grid,
-    # so add each m-tile exactly once (during the j == 0 stripe)
-    @pl.when(jnp.logical_and(j == 0, jm == 0))
-    def _init_sums():
-        asums_ref[...] = sa
-
-    @pl.when(jnp.logical_and(j == 0, jm > 0))
-    def _acc_sums():
-        asums_ref[...] = asums_ref[...] + sa
-
-    @pl.when(jm == 0)
-    def _init_flags():
-        le_ref[...] = le.astype(jnp.int32)
-        ge_ref[...] = ge.astype(jnp.int32)
-
-    @pl.when(jm > 0)
-    def _acc_flags():
-        le_ref[...] = le_ref[...] & le.astype(jnp.int32)
-        ge_ref[...] = ge_ref[...] & ge.astype(jnp.int32)
-
-    @pl.when(jm == n_mtiles - 1)
-    def _finalize():
-        sa_tot = asums_ref[...]               # [bi, 1] complete (see above)
-        sb_tot = bsums_ref[...]               # [1, bj] precomputed input
-        log_q = jnp.log1p(-1.0 / m)
-        inner_b = jnp.clip(-jnp.expm1(sb_tot * log_q), 1e-30, 1.0)  # [1, bj]
-        # Eq. 3 fp of "row i happened-before col j": outer product in log space
-        fp_ref[...] = jnp.exp(sa_tot * jnp.log(inner_b))            # [bi, bj]
-
-
-@functools.partial(
-    jax.jit, static_argnames=("bi", "bj", "bm", "m_true", "interpret"))
-def bloom_matrix_pallas(
-    rows: jax.Array,       # [N, m] int32, padded: N % bi == 0, m % bm == 0
-    cols: jax.Array,       # [M, m] int32, M % bj == 0
-    col_sums: jax.Array,   # [1, M] float32 total increments per column clock
-    *,
-    bi: int = 8,
-    bj: int = 128,
-    bm: int = 512,
-    m_true: int | None = None,
-    interpret: bool = False,
-):
-    N, m = rows.shape
-    M, mc = cols.shape
-    assert m == mc and col_sums.shape == (1, M)
-    assert N % bi == 0 and M % bj == 0 and m % bm == 0, (N, M, m, bi, bj, bm)
-    n_mtiles = m // bm
-    grid = (N // bi, M // bj, n_mtiles)
-    kernel = functools.partial(
-        bloom_matrix_kernel, n_mtiles=n_mtiles, m=m_true if m_true else m
-    )
-    le, ge, row_sums, fp = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bi, bm), lambda i, j, jm: (i, jm)),
-            pl.BlockSpec((bj, bm), lambda i, j, jm: (j, jm)),
-            pl.BlockSpec((1, bj), lambda i, j, jm: (0, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bi, bj), lambda i, j, jm: (i, j)),
-            pl.BlockSpec((bi, bj), lambda i, j, jm: (i, j)),
-            pl.BlockSpec((bi, 1), lambda i, j, jm: (i, 0)),
-            pl.BlockSpec((bi, bj), lambda i, j, jm: (i, j)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((N, M), jnp.int32),
-            jax.ShapeDtypeStruct((N, M), jnp.int32),
-            jax.ShapeDtypeStruct((N, 1), jnp.float32),
-            jax.ShapeDtypeStruct((N, M), jnp.float32),
-        ],
-        interpret=interpret,
-    )(rows, cols, col_sums)
-    return le, ge, row_sums, fp
-
-
-# ---------------------------------------------------------------------------
-# packed u8 engines
-# ---------------------------------------------------------------------------
-
-def _pair_flags_minmax(a_ref, b_ref, abase_ref, bbase_ref,
-                       *, with_base, m_true, bm, jm):
-    """[bi, bj] (le, ge) int8 for one tile pair from ONE int16 difference.
-
-    ``d`` spans ±U8_MAX before the base delta; the delta is clipped to
-    ±(U8_MAX + 1), which preserves verdicts exactly (any |delta| beyond
-    the residual range forces the verdict) and keeps d inside int16.
-    """
-    a = a_ref[...]
-    b = b_ref[...]
-    d = a.astype(jnp.int16)[:, None, :] - b.astype(jnp.int16)[None, :, :]
-    if with_base:
-        delta = jnp.clip(abase_ref[...] - bbase_ref[...].T, -256, 256)
-        d = d + delta[:, :, None].astype(jnp.int16)
-        # zero-padded lanes are only neutral when bases cancel; mask them
-        col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, bm), 2) + jm * bm
-        d = jnp.where(col < m_true, d, 0)
-    le = (jnp.max(d, axis=2) <= 0).astype(jnp.int8)
-    ge = (jnp.min(d, axis=2) >= 0).astype(jnp.int8)
-    return le, ge
-
-
-def _flags_kernel_step(refs, *, jm, with_base, m_true, bm):
-    """Shared body of the packed flag kernels: one min/max difference on
-    this m-tile, AND-accumulated into the revisited [bi, bj] outputs."""
-    if with_base:
-        a_ref, b_ref, abase_ref, bbase_ref, le_ref, ge_ref = refs
-    else:
-        a_ref, b_ref, le_ref, ge_ref = refs
-        abase_ref = bbase_ref = None
-    le, ge = _pair_flags_minmax(a_ref, b_ref, abase_ref, bbase_ref,
-                                with_base=with_base, m_true=m_true,
-                                bm=bm, jm=jm)
-
-    @pl.when(jm == 0)
-    def _init():
-        le_ref[...] = le
-        ge_ref[...] = ge
-
-    @pl.when(jm > 0)
-    def _acc():
-        le_ref[...] = le_ref[...] & le
-        ge_ref[...] = ge_ref[...] & ge
-
-
-def bloom_matrix_tri_kernel(ti_ref, tj_ref, *refs,
-                            n_mtiles: int, with_base: bool,
-                            m_true: int, bm: int):
-    _flags_kernel_step(refs, jm=pl.program_id(1), with_base=with_base,
-                       m_true=m_true, bm=bm)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("bi", "bm", "m_true", "with_base", "interpret"))
-def bloom_matrix_tri_pallas(
-    cells: jax.Array,      # [N, m] uint8 residuals, N % bi == 0, m % bm == 0
-    base: jax.Array,       # [N, 1] int32 per-slot window offsets
-    *,
-    bi: int = 128,
-    bm: int = 512,
-    m_true: int | None = None,
-    with_base: bool = False,
-    interpret: bool = False,
-):
-    """Symmetric all-pairs compare over one packed slab (upper triangle).
-
-    Returns (le, ge) int8 [N, N] valid ONLY in block-upper-triangle
-    positions; the caller fills ``le[lower] = ge.T[lower]`` and vice
-    versa (``ops.compare_matrix_packed`` does).
-    """
-    N, m = cells.shape
-    assert N % bi == 0 and m % bm == 0, (N, m, bi, bm)
-    k = N // bi
-    tri = [(i, j) for i in range(k) for j in range(i, k)]
-    ti = jnp.asarray([i for i, _ in tri], jnp.int32)
-    tj = jnp.asarray([j for _, j in tri], jnp.int32)
-    n_mtiles = m // bm
-    kernel = functools.partial(
-        bloom_matrix_tri_kernel, n_mtiles=n_mtiles, with_base=with_base,
-        m_true=m_true if m_true else m, bm=bm)
-    in_specs = [
-        pl.BlockSpec((bi, bm), lambda t, jm, ti, tj: (ti[t], jm)),
-        pl.BlockSpec((bi, bm), lambda t, jm, ti, tj: (tj[t], jm)),
-    ]
-    operands = [cells, cells]
-    if with_base:
-        in_specs += [
-            pl.BlockSpec((bi, 1), lambda t, jm, ti, tj: (ti[t], 0)),
-            pl.BlockSpec((bi, 1), lambda t, jm, ti, tj: (tj[t], 0)),
-        ]
-        operands += [base, base]
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(len(tri), n_mtiles),
-        in_specs=in_specs,
-        out_specs=[
-            pl.BlockSpec((bi, bi), lambda t, jm, ti, tj: (ti[t], tj[t])),
-            pl.BlockSpec((bi, bi), lambda t, jm, ti, tj: (ti[t], tj[t])),
-        ],
-    )
-    le, ge = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((N, N), jnp.int8),
-            jax.ShapeDtypeStruct((N, N), jnp.int8),
-        ],
-        interpret=interpret,
-    )(ti, tj, *operands)
-    return le, ge
-
-
-def bloom_matrix_packed_kernel(*refs, n_mtiles: int, with_base: bool,
-                               m_true: int, bm: int):
-    _flags_kernel_step(refs, jm=pl.program_id(2), with_base=with_base,
-                       m_true=m_true, bm=bm)
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("bi", "bj", "bm", "m_true", "with_base", "interpret"))
-def bloom_matrix_packed_pallas(
-    rows: jax.Array,       # [N, m] uint8, N % bi == 0, m % bm == 0
-    cols: jax.Array,       # [M, m] uint8, M % bj == 0
-    row_base: jax.Array,   # [N, 1] int32
-    col_base: jax.Array,   # [M, 1] int32
-    *,
-    bi: int = 128,
-    bj: int = 128,
-    bm: int = 512,
-    m_true: int | None = None,
-    with_base: bool = False,
-    interpret: bool = False,
-):
-    """Full-rectangle packed compare: (le, ge) int8 [N, M]."""
-    N, m = rows.shape
-    M, mc = cols.shape
-    assert m == mc and N % bi == 0 and M % bj == 0 and m % bm == 0
-    n_mtiles = m // bm
-    kernel = functools.partial(
-        bloom_matrix_packed_kernel, n_mtiles=n_mtiles, with_base=with_base,
-        m_true=m_true if m_true else m, bm=bm)
-    in_specs = [
-        pl.BlockSpec((bi, bm), lambda i, j, jm: (i, jm)),
-        pl.BlockSpec((bj, bm), lambda i, j, jm: (j, jm)),
-    ]
-    operands = [rows, cols]
-    if with_base:
-        in_specs += [
-            pl.BlockSpec((bi, 1), lambda i, j, jm: (i, 0)),
-            pl.BlockSpec((bj, 1), lambda i, j, jm: (j, 0)),
-        ]
-        operands += [row_base, col_base]
-    le, ge = pl.pallas_call(
-        kernel,
-        grid=(N // bi, M // bj, n_mtiles),
-        in_specs=in_specs,
-        out_specs=[
-            pl.BlockSpec((bi, bj), lambda i, j, jm: (i, j)),
-            pl.BlockSpec((bi, bj), lambda i, j, jm: (i, j)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((N, M), jnp.int8),
-            jax.ShapeDtypeStruct((N, M), jnp.int8),
-        ],
-        interpret=interpret,
-    )(*operands)
-    return le, ge
-
-
-def bloom_matrix_mxu_kernel(
-    a_ref, b_ref, abase_ref, bbase_ref, viol_ref,
-    *, n_mtiles: int, n_thresholds: int, lo: int, m_true: int, bm: int,
-):
-    jm = pl.program_id(2)
-    # shift residuals to window-relative logical values in [0, T]
-    av = a_ref[...].astype(jnp.int32) + (abase_ref[...] - lo)   # [bi, bm]
-    bv = b_ref[...].astype(jnp.int32) + (bbase_ref[...] - lo)   # [bj, bm]
-    # padded lanes must contribute zero violations either way
-    col = jax.lax.broadcasted_iota(jnp.int32, (1, bm), 1) + jm * bm
-    av = jnp.where(col < m_true, av, -1)                 # a >= t never
-    bv = jnp.where(col < m_true, bv, n_thresholds + 1)   # b <  t never
-    thr = jax.lax.broadcasted_iota(
-        jnp.int32, (1, 1, n_thresholds), 2) + 1          # t = 1 .. T
-    bi_, bj_ = av.shape[0], bv.shape[0]
-    enc_a = (av[:, :, None] >= thr).reshape(
-        bi_, -1).astype(jnp.float32)                     # [bi, bm*T]
-    enc_b = (bv[:, :, None] < thr).reshape(
-        bj_, -1).astype(jnp.float32)                     # [bj, bm*T]
-    # sum_m relu(a - b) == #{(m, t) : b_jm < t <= a_im} — one contraction
-    v = jax.lax.dot_general(
-        enc_a, enc_b, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)              # [bi, bj]
-
-    @pl.when(jm == 0)
-    def _init():
-        viol_ref[...] = v
-
-    @pl.when(jm > 0)
-    def _acc():
-        viol_ref[...] = viol_ref[...] + v
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("bi", "bj", "bm", "n_thresholds", "lo", "m_true",
-                     "interpret"))
-def bloom_matrix_mxu_pallas(
-    rows: jax.Array,       # [N, m] uint8
-    cols: jax.Array,       # [M, m] uint8
-    row_base: jax.Array,   # [N, 1] int32
-    col_base: jax.Array,   # [M, 1] int32
-    *,
-    n_thresholds: int,     # static value-span budget T (window width)
-    lo: int,               # static minimum logical value across both slabs
-    bi: int = 128,
-    bj: int = 128,
-    bm: int = 128,
-    m_true: int | None = None,
-    interpret: bool = False,
-):
-    """MXU dominance reduction: violation counts via one dot_general.
-
-    Returns viol f32 [N, M] with ``viol[i, j] == sum_m relu(a_im -
-    b_jm)`` exactly (counts << 2^24).  ``le = viol == 0``; the caller
-    derives ``ge`` from the rank-1 identity with row/col sums.  Requires
-    every logical value in [lo, lo + n_thresholds].
-    """
-    N, m = rows.shape
-    M, mc = cols.shape
-    assert m == mc and N % bi == 0 and M % bj == 0 and m % bm == 0
-    # violation counts accumulate in f32: keep them exactly representable
-    assert (m_true if m_true else m) * n_thresholds < 2**24, \
-        (m_true, n_thresholds, "f32 exactness bound exceeded")
-    n_mtiles = m // bm
-    kernel = functools.partial(
-        bloom_matrix_mxu_kernel, n_mtiles=n_mtiles,
-        n_thresholds=n_thresholds, lo=lo,
-        m_true=m_true if m_true else m, bm=bm)
-    viol = pl.pallas_call(
-        kernel,
-        grid=(N // bi, M // bj, n_mtiles),
-        in_specs=[
-            pl.BlockSpec((bi, bm), lambda i, j, jm: (i, jm)),
-            pl.BlockSpec((bj, bm), lambda i, j, jm: (j, jm)),
-            pl.BlockSpec((bi, 1), lambda i, j, jm: (i, 0)),
-            pl.BlockSpec((bj, 1), lambda i, j, jm: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((bi, bj), lambda i, j, jm: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((N, M), jnp.float32),
-        interpret=interpret,
-    )(rows, cols, row_base, col_base)
-    return viol
-
-
-def bloom_one_vs_many_packed_kernel(
-    q_ref, p_ref, pbase_ref,
-    flags_ref, sums_ref, fp_ref,
-    *, n_mtiles: int, m: int, bm: int,
-):
-    j = pl.program_id(1)
-    q = q_ref[...]                                       # [1, bm] int32
-    # widen the u8 peer tile in VMEM; HBM read stays one byte per cell
-    p = p_ref[...].astype(jnp.int32) + pbase_ref[...]    # [bn, bm]
-    col = jax.lax.broadcasted_iota(jnp.int32, (1, bm), 1) + j * bm
-    p = jnp.where(col < m, p, 0)                         # neutral pad lanes
-
-    le = jnp.all(q <= p, axis=1, keepdims=True)          # [bn, 1] q <= peer
-    ge = jnp.all(q >= p, axis=1, keepdims=True)
-    sp = jnp.sum(p, axis=1, keepdims=True).astype(jnp.float32)
-    sq = jnp.broadcast_to(
-        jnp.sum(q, axis=1, keepdims=True).astype(jnp.float32), sp.shape)
-
-    @pl.when(j == 0)
-    def _init():
-        flags_ref[...] = jnp.concatenate([le, ge], axis=1).astype(jnp.int32)
-        sums_ref[...] = jnp.concatenate([sq, sp], axis=1)
-
-    @pl.when(j > 0)
-    def _acc():
-        cur = jnp.concatenate([le, ge], axis=1).astype(jnp.int32)
-        flags_ref[...] = flags_ref[...] & cur
-        sums_ref[...] = sums_ref[...] + jnp.concatenate([sq, sp], axis=1)
-
-    @pl.when(j == n_mtiles - 1)
-    def _finalize():
-        s = sums_ref[...]
-        log_q = jnp.log1p(-1.0 / m)
-        inner_p = jnp.clip(-jnp.expm1(s[:, 1:2] * log_q), 1e-30, 1.0)
-        inner_q = jnp.clip(-jnp.expm1(s[:, 0:1] * log_q), 1e-30, 1.0)
-        fp_qp = jnp.exp(s[:, 0:1] * jnp.log(inner_p))
-        fp_pq = jnp.exp(s[:, 1:2] * jnp.log(inner_q))
-        fp_ref[...] = jnp.concatenate([fp_qp, fp_pq], axis=1)
-
-
-@functools.partial(jax.jit, static_argnames=("bn", "bm", "m_true", "interpret"))
-def bloom_one_vs_many_packed_pallas(
-    q: jax.Array,        # [1, m] int32 logical query, zero-padded
-    peers: jax.Array,    # [N, m] uint8 residual slab, N % bn == 0
-    base: jax.Array,     # [N, 1] int32 per-slot offsets
-    *,
-    bn: int = 8,
-    bm: int = 512,
-    m_true: int | None = None,
-    interpret: bool = False,
-):
-    """One-vs-many classify against a PACKED peer slab (u8 HBM reads)."""
-    N, m = peers.shape
-    assert q.shape == (1, m) and m % bm == 0 and N % bn == 0
-    n_mtiles = m // bm
-    kernel = functools.partial(
-        bloom_one_vs_many_packed_kernel, n_mtiles=n_mtiles,
-        m=m_true if m_true else m, bm=bm)
-    flags, sums, fp = pl.pallas_call(
-        kernel,
-        grid=(N // bn, n_mtiles),
-        in_specs=[
-            pl.BlockSpec((1, bm), lambda i, j: (0, j)),
-            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
-            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bn, 2), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, 2), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, 2), lambda i, j: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((N, 2), jnp.int32),
-            jax.ShapeDtypeStruct((N, 2), jnp.float32),
-            jax.ShapeDtypeStruct((N, 2), jnp.float32),
-        ],
-        interpret=interpret,
-    )(q, peers, base)
-    return flags, sums, fp

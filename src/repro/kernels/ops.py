@@ -31,7 +31,7 @@ import warnings
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.hashing import bloom_indices
 from repro.kernels import autotune
@@ -422,11 +422,22 @@ def _matrix_dict(le, ge, row_sums, col_sums, m_true):
 
 
 def _matrix_blocks(engine, N, M, m, bi, bj, bm, interpret,
-                   use_table: bool = True):
-    """Resolve block shapes: explicit args > autotune table > defaults."""
-    cfg = (autotune.lookup("matrix", N, M, m, interpret) or {}) \
-        if use_table else {}
-    if cfg.get("engine") != engine:
+                   use_table: bool = True, shards: int = 1):
+    """Resolve block shapes: explicit args > autotune table > defaults.
+
+    Sharded resolution (``shards > 1``) consults the ``matrix_sharded``
+    table entry keyed by the GLOBAL shape AND the shard count — never
+    the plain ``matrix`` entry for the per-shard sub-shape — so a
+    d-shard tune and a 1-shard tune whose shapes happen to collide can
+    never poison each other's block choices."""
+    if not use_table:
+        cfg = {}
+    elif shards > 1:
+        cfg = autotune.lookup("matrix_sharded", N, M, m, interpret,
+                              shards=shards) or {}
+    else:
+        cfg = autotune.lookup("matrix", N, M, m, interpret) or {}
+    if shards == 1 and cfg.get("engine") != engine:
         cfg = {}
     if interpret:
         dflt = {"tri": (128, 128, 512), "full": (128, 128, 512),
@@ -549,67 +560,160 @@ def _compare_matrix_packed_sharded(
     mesh,                       # jax.sharding.Mesh carrying ``axis``
     axis: str,                  # mesh axis the slab rows are sharded over
     engine: str | None = None,  # engine HINT; the ring resolves to "full"
+    strategy: str | None = None,   # "ring" | "replicated" | None = table
     bi: int | None = None,
     bj: int | None = None,
     bm: int | None = None,
     uniform_base: bool | None = None,
     interpret: bool | None = None,
     use_autotune: bool = True,
+    mesh_outputs: bool = True,
 ):
-    """Symmetric all-pairs over a row-sharded packed slab: block-row ring.
+    """Symmetric all-pairs over a row-sharded packed slab.
 
-    Each of the ``d`` devices holds a ``[N/d, m]`` row shard and
-    circulates a column shard around the mesh ring with ``ppermute``;
-    every ring step compares its resident rows against the visiting
-    columns with the packed full-rect engine, filling one ``[N/d, N/d]``
-    block of its ``[N/d, N]`` block-row.  The sweep is HALVED by
-    symmetry: only ceil(d/2) visiting offsets are computed, and each
-    off-diagonal block ships its transposed flags back across the ring
-    (``le(j, i) == ge(i, j)^T``) to fill the mirror block, so the
-    shard_map output still concatenates to the full ``[N, N]`` flag
-    matrices after 1 + ceil(d/2) kernel steps instead of d.
+    Two strategies, dispatched per shape from the autotune table's
+    ``matrix_sharded`` entry (explicit ``strategy`` wins; default
+    ``ring`` when the table is silent):
 
-    Per-device HBM traffic is O(N * m / d) resident + O(N * m / 2)
-    streamed ring tiles (plus two [N/d, N/d] int8 flag blocks shipped
-    back per halved step); peak per-device memory never materializes
-    the whole slab.  Flags are exact — mirroring by transposition moves
-    bits, it never recomputes them — and the fp / sums finalize runs
-    through the SAME ``_eq3_outer`` / ``_packed_row_sums`` expressions
-    as the unsharded engines over exact integer sums, so results are
-    bit-identical for every shard count.
+    ``ring`` — each of the ``d`` devices holds a ``[N/d, m]`` row shard
+    and circulates a column shard around the mesh ring with
+    ``ppermute``; every ring step compares its resident rows against
+    the visiting columns, filling one ``[N/d, N/d]`` block of its
+    ``[N/d, N]`` block-row.  The sweep is HALVED by symmetry: only
+    ceil(d/2) visiting offsets are computed, and each off-diagonal
+    block ships its transposed flags back across the ring
+    (``le(j, i) == ge(i, j)^T``) to fill the mirror block.  Since PR 7
+    the ring is also: DOUBLE-BUFFERED (the ppermute for step s+1 is
+    issued before the compute on step s, so communication overlaps
+    compute on real meshes); TRIANGLE-swept on the diagonal step (the
+    resident-vs-resident block is symmetric, so the tri engine sweeps
+    its upper half and mirrors locally); and DEDUPLICATED on the even-d
+    half-way offset (only devices ``i < d/2`` run the kernel; the
+    mirror halves arrive by a partial ppermute of the transposed
+    flags).  Per-device work is the single-device triangle divided by
+    d, so the ring wins wherever devices compute in parallel.
+
+    ``replicated`` — don't shard the compare at all: gather the packed
+    slab (u8 residuals + int32 bases, the cheapest representation to
+    ship) onto one mesh device and run the plain single-device triangle
+    engine there.  No per-step collectives and no SPMD program; this
+    wins where mesh devices are time-sliced onto the same host cores
+    (forced-host CI meshes) and ring collectives buy no parallelism —
+    exactly what the autotuner's cost model predicts and its measured
+    sweep confirms per backend.
+
+    Both strategies are bit-identical to the unsharded sweep: flags are
+    exact (mirroring moves bits, it never recomputes them; replication
+    runs the very same kernel), and the fp / sums finalize runs through
+    the SAME ``_eq3_outer`` / ``_packed_row_sums`` expressions.
 
     Pass ``uniform_base`` explicitly on hot paths (the registry does,
     from its host-side base copy): the default probes the sharded base
     vector, which costs a cross-device reduction plus a blocking host
     sync per call.
+
+    ``mesh_outputs`` (default True) guarantees the result arrays are
+    row-sharded over the mesh whatever strategy ran — required whenever
+    the caller combines them with other mesh-sharded arrays (dead-slot
+    masks, promoted-row overlays).  Callers that hand the dict straight
+    back (the fully-alive packed fast path) pass False so the
+    replicated strategy skips a pointless [N, N] x 4 reshard.
     """
     if interpret is None:
         interpret = not _on_tpu()
     # every engine name valid elsewhere is accepted so sharding a
     # registry never breaks existing all_pairs(**kw) call sites: "tri"
-    # has no per-tile meaning on the ring (tiles are rectangles), "mxu"
-    # would need a host-synced global span probe, and "i32" is the
-    # legacy-kernel hint from _compare_matrix — all resolve to the
-    # full-rect packed engine, whose flags are exact regardless
+    # has no per-tile meaning on the ring (off-diagonal tiles are
+    # rectangles), "mxu" would need a host-synced global span probe,
+    # and "i32" is the legacy-kernel hint from _compare_matrix — all
+    # resolve to the packed tri/rect engines, whose flags are exact
     if engine not in (None, "full", "tri", "mxu", "i32"):
         raise ValueError(f"unknown packed engine: {engine}")
     N, m = cells.shape
     d = mesh.shape[axis]
     if N % d:
         raise ValueError(f"slab rows {N} not divisible by {d} shards")
-    base = jnp.asarray(base, jnp.int32).reshape(-1)
+    # keep the caller's array object when already normalized — the
+    # replicated branch memoizes the cross-device copy by identity
+    if not (isinstance(base, jax.Array) and base.dtype == jnp.int32
+            and base.ndim == 1):
+        base = jnp.asarray(base, jnp.int32).reshape(-1)
     if uniform_base is None:
         b = base
         uniform_base = bool((b == b[0]).all())
     with_base = not uniform_base
-    bi, bj, bm = _matrix_blocks("full", N // d, N // d, m, bi, bj, bm,
-                                interpret, use_autotune)
-    _note_dispatch("matrix", "ring_full", bi=bi, bj=bj, bm=bm, shards=d)
+    if strategy is None:
+        cfg = (autotune.lookup("matrix_sharded", N, N, m, interpret,
+                               shards=d) or {}) if use_autotune else {}
+        strategy = cfg.get("strategy", "ring")
+    if strategy == "replicated":
+        dev = mesh.devices.flat[0]
+        cells_g = _gathered_replica(cells, dev)
+        base_g = _gathered_replica(base, dev)
+        out = _compare_matrix_packed(
+            cells_g, base_g, bi=bi, bj=bj, bm=bm,
+            uniform_base=uniform_base, interpret=interpret,
+            use_autotune=use_autotune)
+        inner = dict(LAST_DISPATCH)
+        if mesh_outputs:
+            # hand back the ring's placement contract: [N, N] matrices
+            # row-sharded over the mesh, [N] sums sharded — downstream
+            # masking/overlay code must not see single-device commitments
+            out = {k: jax.device_put(v, NamedSharding(
+                       mesh, P(axis, None) if v.ndim == 2 else P(axis)))
+                   for k, v in out.items()}
+        _note_dispatch("matrix",
+                       f"replicated_{inner.get('engine', 'tri')}",
+                       bi=inner.get("bi"), bj=inner.get("bj"),
+                       bm=inner.get("bm"), shards=d, strategy="replicated")
+        return out
+    if strategy != "ring":
+        raise ValueError(f"unknown sharded strategy: {strategy}")
+    bi, bj, bm = _matrix_blocks("full", N, N, m, bi, bj, bm,
+                                interpret, use_autotune, shards=d)
+    _note_dispatch("matrix", "ring_full", bi=bi, bj=bj, bm=bm, shards=d,
+                   strategy="ring")
     fn = _sharded_ring_fn(mesh, axis, N, bi, bj, bm, m, with_base, interpret)
     le, ge = fn(cells, base)
     row_sums = _packed_row_sums(cells, base, m)
     return _matrix_dict(le.astype(bool), ge.astype(bool),
                         row_sums, row_sums, m)
+
+
+# gather memo for the "replicated" sharded strategy: registries call
+# all_pairs repeatedly on the SAME slab array, so the cross-device copy
+# is paid once per slab, not per call.  Keyed on object identity and
+# guarded by a strong reference to the keyed array itself — an id can't
+# be reused while the cache still holds the object it identifies.
+_REPLICA_CACHE: dict = {}
+
+
+def _gathered_replica(cells, dev):
+    key = (id(cells), dev)
+    hit = _REPLICA_CACHE.get(key)
+    if hit is not None and hit[0] is cells:
+        return hit[1]
+    if len(_REPLICA_CACHE) >= 8:
+        _REPLICA_CACHE.clear()
+    gathered = jax.device_put(cells, dev)
+    _REPLICA_CACHE[key] = (cells, gathered)
+    return gathered
+
+
+def _tri_flags(cells, b, bi, bm, m: int, with_base: bool, interpret: bool):
+    """Triangle-sweep flags for one symmetric block, mirrored locally
+    (``le(i, j) == ge(j, i)``) and cropped — the per-device diagonal
+    step of the ring, at half the pairwise work of a full rectangle."""
+    n = cells.shape[0]
+    cells_p, bi_eff, bm_eff = tile2d(cells, bi, bm)
+    le, ge = bloom_matrix_tri_pallas(
+        cells_p, _pad_base(b, cells_p.shape[0]), bi=bi_eff, bm=bm_eff,
+        m_true=m, with_base=with_base, interpret=interpret)
+    k = le.shape[0] // bi_eff
+    blk = jnp.arange(k).repeat(bi_eff)
+    upper = blk[:, None] <= blk[None, :]
+    return (jnp.where(upper, le, ge.T)[:n, :n],
+            jnp.where(upper, ge, le.T)[:n, :n])
 
 
 @functools.lru_cache(maxsize=64)
@@ -624,28 +728,76 @@ def _sharded_ring_fn(mesh, axis: str, N: int, bi: int, bj: int, bm: int,
     ``s = 0 .. d//2`` run the kernel.  For ``1 <= s <= (d-1)//2`` the
     device that computed block ``(i, i+s)`` ships both flag blocks
     transposed ``s`` hops forward, where they land exactly on the owner
-    of the mirror block ``(i+s, i)``.  The even-d half-way offset
-    ``s = d/2`` is its own mirror across the ring (device ``i+d/2``
-    computes ``(i+d/2, i)`` at the same step), so it needs no ship.
-    Kernel steps drop from ``d`` to ``1 + d//2`` — the deliberate 2x of
-    the original ring is gone.
+    of the mirror block ``(i+s, i)``.
+
+    Three PR 7 refinements on top:
+
+    - **Double buffering**: the column-shard ppermute feeding step
+      ``s + 1`` is issued as soon as step ``s``'s shard arrives, BEFORE
+      step ``s``'s kernel runs, so its only data dependence is the
+      previous permute.  XLA's async collective-permute then overlaps
+      the transfer with the compute under it.
+    - **Triangle diagonal**: step 0 compares the resident shard with
+      itself — a symmetric block — so it runs the tri engine over the
+      block-upper half and mirrors locally, not a full rectangle.
+    - **Half-way dedup** (even d): offset ``s = d/2`` pairs each device
+      with its antipode, and BOTH used to compute the same mirrored
+      work.  Now only devices ``i < d/2`` run the kernel; a partial
+      ppermute ships the transposed flags to the antipode, and each
+      side fills its block-column slot from whichever of
+      (computed, received) is real on that device.
+
+    Per-device kernel work is thus ``tri(N/d) + (d-1)/2 x rect(N/d)``
+    — exactly ``tri(N) / d``: the sharded sweep does NO redundant
+    compute at any shard count, it only adds the ring transfers.  The
+    base vector is only circulated when bases are non-uniform (the
+    kernels ignore it otherwise).
     """
     d = mesh.shape[axis]
+    steps = d // 2 + 1
 
     def ring(cu8, b):
         nd = cu8.shape[0]
         my = jax.lax.axis_index(axis)
         le_acc = jnp.zeros((nd, N), jnp.int8)
         ge_acc = jnp.zeros((nd, N), jnp.int8)
-        cols, cb = cu8, b
         shift = [(i, (i - 1) % d) for i in range(d)]
-        for s in range(d // 2 + 1):
+
+        def permute(cols, cb):
+            return (jax.lax.ppermute(cols, axis, shift),
+                    jax.lax.ppermute(cb, axis, shift) if with_base else cb)
+
+        cols, cb = cu8, b
+        nxt = permute(cols, cb) if steps > 1 else None
+        for s in range(steps):
             if s:
-                cols = jax.lax.ppermute(cols, axis, shift)
-                cb = jax.lax.ppermute(cb, axis, shift)
+                cols, cb = nxt
+                # issue the NEXT shard's permute before this step's
+                # compute: the transfer overlaps the kernel below
+                nxt = permute(cols, cb) if s + 1 < steps else None
             src = (my + s) % d          # column block visiting this step
-            le, ge = _full_rect_flags(cu8, b, cols, cb, bi, bj, bm,
-                                      m, with_base, interpret)
+            if s == 0:
+                le, ge = _tri_flags(cu8, b, max(bi, bj), bm,
+                                    m, with_base, interpret)
+            elif d % 2 == 0 and s == d // 2:
+                # half-way offset: my and my+d/2 hold each other's
+                # mirror, so only the lower half computes; collectives
+                # stay OUTSIDE the cond — every device executes them
+                compute = my < d // 2
+                zeros = (jnp.zeros((nd, nd), jnp.int8),) * 2
+                le_c, ge_c = jax.lax.cond(
+                    compute,
+                    lambda: _full_rect_flags(cu8, b, cols, cb, bi, bj,
+                                             bm, m, with_base, interpret),
+                    lambda: zeros)
+                half = [(i, i + d // 2) for i in range(d // 2)]
+                le_r = jax.lax.ppermute(ge_c.T, axis, half)
+                ge_r = jax.lax.ppermute(le_c.T, axis, half)
+                le = jnp.where(compute, le_c, le_r)
+                ge = jnp.where(compute, ge_c, ge_r)
+            else:
+                le, ge = _full_rect_flags(cu8, b, cols, cb, bi, bj, bm,
+                                          m, with_base, interpret)
             le_acc = jax.lax.dynamic_update_slice(
                 le_acc, le, (0, src * nd))
             ge_acc = jax.lax.dynamic_update_slice(
