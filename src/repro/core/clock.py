@@ -12,6 +12,19 @@ Paper-op mapping:
   fp_rate     §3 Eq. 3    ((1-(1-1/m)^{ΣB})^{ΣA}), log-stable
   compress    §4          ((c)[residuals] base-offset form)
 
+**Bounded-counter semantics** (practically-self-stabilizing vector
+clocks): int32 counters live on the mod-2^32 circle, so every compare /
+max / min below is derived from the *wrap-subtraction* ``a - b`` — in
+two's complement that difference is the correct signed distance
+whenever the true gap is under 2^31, even when one side has wrapped
+past ``INT32_MAX`` and the other has not.  For clocks in the sane range
+(everything far from the wrap point) the derived predicates are
+bit-identical to the direct ``<=`` / ``maximum`` forms, which is what
+keeps every kernel bit-identity pin intact; near the wrap point they
+keep returning the right answer where the direct forms silently invert.
+The same derivation runs inside the Pallas kernels
+(``repro.kernels.template``).
+
 The hot paths (tick / fused merge+compare) have Pallas TPU kernels in
 ``repro.kernels``; this module is the reference implementation.  For
 comparisons, the public surface is ``repro.causal`` (``causal.compare``
@@ -97,13 +110,27 @@ def zeros(m: int, k: int = 4, batch_shape: tuple = (), dtype=jnp.int32) -> Bloom
     )
 
 
+def _as_mod_u32(x: jax.Array) -> jax.Array:
+    """Reinterpret int32 counters as their position on the mod-2^32
+    circle (uint32).  A wrapped counter (negative two's-complement bits)
+    reads back as the large value it actually represents; sane values
+    are unchanged."""
+    if x.dtype == jnp.int32:
+        return jax.lax.bitcast_convert_type(x, jnp.uint32)
+    return x
+
+
 def clock_sum(c: BloomClock) -> jax.Array:
     """Total number of increments recorded (Σ cells + m·base), as float32.
 
     float32 because sums reach k × events and feed Eq. 3 exponents.
+    int32 cells/bases are read through their mod-2^32 positions, so a
+    near-wrap clock contributes its true (huge, Eq.3-saturating) sum
+    instead of an int32-overflowed garbage value; in the sane range the
+    result is bit-identical to a plain int32 sum.
     """
-    s = jnp.sum(c.cells, axis=-1).astype(jnp.float32)
-    return s + c.base.astype(jnp.float32) * c.m
+    s = jnp.sum(_as_mod_u32(c.cells), axis=-1).astype(jnp.float32)
+    return s + _as_mod_u32(c.base).astype(jnp.float32) * c.m
 
 
 def tick(c: BloomClock, event_hi, event_lo) -> BloomClock:
@@ -127,12 +154,15 @@ def merge(a: BloomClock, b: BloomClock) -> BloomClock:
     """§3 step 3: element-wise max of logical cells.
 
     Keeps the max base and re-normalizes residuals so compression survives
-    merging.
+    merging.  The max is derived from the wrap-subtraction
+    ``a + relu(b - a)`` so a near-wrap clock merges correctly
+    (bounded-counter semantics); in the sane range this is bit-identical
+    to ``jnp.maximum``.
     """
     la = a.logical_cells()
     lb = b.logical_cells()
-    mx = jnp.maximum(la, lb)
-    base = jnp.maximum(a.base, b.base)
+    mx = la + jnp.maximum(lb - la, 0)
+    base = jnp.where(a.base - b.base >= 0, a.base, b.base)
     return BloomClock(cells=mx - base[..., None].astype(mx.dtype), base=base, k=a.k)
 
 
@@ -182,8 +212,13 @@ def ordering(a: BloomClock, b: BloomClock) -> Ordering:
     """
     la = a.logical_cells()
     lb = b.logical_cells()
-    a_le_b = jnp.all(la <= lb, axis=-1)
-    b_le_a = jnp.all(lb <= la, axis=-1)
+    # wrap-subtraction dominance (bounded-counter semantics): the signed
+    # difference is exact whenever the true gap is < 2^31, so a clock
+    # that wrapped past INT32_MAX still compares correctly; identical to
+    # the direct <= in the sane range
+    d = lb - la
+    a_le_b = jnp.all(d >= 0, axis=-1)
+    b_le_a = jnp.all(d <= 0, axis=-1)
     equal = jnp.logical_and(a_le_b, b_le_a)
     concurrent = jnp.logical_not(jnp.logical_or(a_le_b, b_le_a))
     sa = clock_sum(a)
@@ -213,8 +248,14 @@ def compress(c: BloomClock) -> BloomClock:
 
     [4,3,3,5,7,...] -> base+=3, cells=[1,0,0,2,4,...].  Happens naturally
     every ~m/k events; callers may apply it after every merge.
+
+    The min is taken over wrap-differences from a reference cell so a
+    window straddling the int32 wrap point (some cells wrapped negative,
+    some not) still finds the true window floor; exact integer identity
+    with the direct min in the sane range.
     """
-    mn = jnp.min(c.cells, axis=-1)
+    ref = c.cells[..., :1]
+    mn = ref[..., 0] + jnp.min(c.cells - ref, axis=-1)
     return BloomClock(
         cells=c.cells - mn[..., None],
         base=c.base + mn.astype(c.base.dtype),
@@ -232,8 +273,11 @@ def residual_span(c: BloomClock) -> jax.Array:
 
     A clock whose span fits a byte ships / stores as u8 residuals plus
     one int32 base (see ``to_wire`` and ``repro.kernels.pack``).
+    Wrap-safe: measured on differences from a reference cell, so a
+    window straddling the int32 wrap point reports its true width.
     """
-    return jnp.max(c.cells, axis=-1) - jnp.min(c.cells, axis=-1)
+    d = c.cells - c.cells[..., :1]
+    return jnp.max(d, axis=-1) - jnp.min(d, axis=-1)
 
 
 def to_wire(c: BloomClock) -> dict:

@@ -197,13 +197,18 @@ class GossipSimResult:
     digest_bytes: int = 0     # MEASURED inbound digest bytes across rounds
     delta_bytes: int = 0      # MEASURED inbound delta-frame bytes
     pushback_bytes: int = 0   # MEASURED outbound push-back frame bytes
+    converged: bool = True    # all nodes ended on identical rows (chaos)
+    fault_events: int = 0     # faults the ChaosTransport injected
+    rejected_frames: int = 0  # damaged frames the sessions rejected
+    corrupted: int = 0        # registry rows flagged by integrity checks
+    repaired: int = 0         # quarantined rows rewritten by gossip repair
 
     @property
     def wire_bytes(self) -> int:
         return self.digest_bytes + self.delta_bytes + self.pushback_bytes
 
     def summary(self) -> str:
-        return (
+        s = (
             f"rounds={self.rounds} fn={self.false_negatives} "
             f"claims={self.claims} fp={self.false_positives} "
             f"measured_fp={self.measured_fp_rate:.4f} "
@@ -212,11 +217,19 @@ class GossipSimResult:
             f"quarantines={self.quarantines} "
             f"wire={self.wire_bytes}B[{self.transport}]"
         )
+        if self.fault_events:
+            s += (f" faults={self.fault_events} "
+                  f"rejected={self.rejected_frames} "
+                  f"converged={self.converged}")
+        if self.corrupted:
+            s += f" corrupted={self.corrupted} repaired={self.repaired}"
+        return s
 
 
 def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
                    gossip_cfg=None, registry_factory=None,
-                   transport: str = "loopback") -> GossipSimResult:
+                   transport: str = "loopback", chaos=None,
+                   corrupt_at=None, settle_rounds: int = 3) -> GossipSimResult:
     """Replay a random execution and interleave REAL fleet gossip rounds,
     scoring every verdict against the exact vector-clock truth.
 
@@ -247,8 +260,28 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
     syncs the observer's registry purely through the digest/delta/§4
     wire-frame path.  All reported wire bytes are measured frame
     lengths.  The verdict audit is identical for every fabric.
+
+    ``chaos`` (a ``fleet.chaos.ChaosConfig``) wraps the chosen fabric in
+    a ``ChaosTransport``: drops, duplicates, reorders, damaged frames,
+    mid-session crashes, and partitions are injected between the
+    session and the fabric, then quiesced for ``settle_rounds`` extra
+    event-free rounds so the run can assert **convergence** (every node
+    on identical rows — ``GossipSimResult.converged``) and **zero false
+    negatives** under fault load.  Under chaos a registry row may be a
+    STALE snapshot of its peer (delayed / duplicated frames), so
+    verdicts are scored against the vector-clock state each row
+    actually carries — tracked per published-snapshot CRC through the
+    audit trail's ``frame_ingest`` records — not against the peer's
+    current clock; a stale-but-honest row is not a false negative.
+
+    ``corrupt_at=(round, peer)`` flips bits in that peer's registry row
+    before the given round (first round it exists) and turns on
+    ``GossipConfig.verify_rows``: the session must detect the CRC
+    mismatch, quarantine the row, and repair it via a forced delta
+    re-pull (``GossipSimResult.corrupted`` / ``repaired``).
     """
     from repro.causal import CausalPolicy
+    from repro.core import wire
     from repro.fleet import gossip as fg
     from repro.fleet import monitor as fm
     from repro.fleet import registry as fr
@@ -258,11 +291,16 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
     if gossip_cfg is None:
         # accept-everything-comparable audit policy, threaded as a
         # CausalPolicy so the sim exercises the same config surface the
-        # runtime uses
+        # runtime uses.  Under chaos, forks are legitimate concurrency
+        # (not replica divergence), so sessions merge them (§3 pure
+        # receive rule) — quarantined forks could never reconverge.
         fg_cfg = fg.GossipConfig(policy=CausalPolicy(fp_threshold=1.0),
-                                 straggler_gap=np.inf)
+                                 straggler_gap=np.inf,
+                                 merge_forked=chaos is not None)
     else:
         fg_cfg = gossip_cfg
+    if chaos is not None and corrupt_at is not None:
+        fg_cfg = dataclasses.replace(fg_cfg, verify_rows=True)
     rng = np.random.default_rng(cfg.seed)
     n, m, k = cfg.n_nodes, cfg.m, cfg.k
     idx = _event_probe_indices(cfg)
@@ -279,6 +317,13 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
                   or (fg_cfg.policy.observer
                       if fg_cfg.policy is not None else None)
                   or getattr(registry.policy, "observer", None))
+    if chaos is not None and not obs.audit:
+        # chaos scoring reads realized ingest order + row CRCs from the
+        # trail, so an audit sink is mandatory under fault injection
+        from repro.obs import AuditTrail, Observer
+        obs = Observer(trace=obs.trace, metrics=obs.metrics,
+                       audit=AuditTrail())
+        fg_cfg = dataclasses.replace(fg_cfg, observer=obs)
 
     nodes: dict = {}
     servers: list = []
@@ -298,6 +343,11 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
             {f"n{p}": s.address for p, s in zip(peers, servers)})
     else:
         raise ValueError(f"unknown transport {transport!r}")
+    chaos_tp = None
+    if chaos is not None:
+        from repro.fleet import chaos as chaos_mod
+        chaos_tp = chaos_mod.ChaosTransport(tp, chaos, observer=obs)
+        tp = chaos_tp
     # registry key each sim peer is tracked under (socket peers arrive
     # from the wire under their node ids)
     pid_of = {p: (f"n{p}" if p in nodes else p) for p in peers}
@@ -309,12 +359,144 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
 
     fn = fp_count = claims = merges = quarantines = 0
     digest_bytes = delta_bytes = pushback_bytes = 0
+    rejected_frames = corrupted_rows = repaired_rows = 0
     predicted: list[float] = []
     round_marks = set(
         np.linspace(cfg.n_events // max(n_rounds, 1), cfg.n_events - 1,
                     n_rounds, dtype=int).tolist())
     rounds_done = 0
+    converged = True
+    corrupt_done = False
+    # chaos ground truth: a registry row may be a STALE snapshot of its
+    # peer, so each published bloom state's CRC maps to the vector-clock
+    # state it was taken with, and ``reg_truth`` shadows what each
+    # registry row causally contains (None = unknowable, never scored)
+    vec_by_crc: dict[int, np.ndarray] = {}
+    reg_truth: dict = {}
+    by_spid = {str(pid_of[p]): p for p in peers}
 
+    def chaos_round(bloom, vec):
+        """One gossip round under fault injection, scored against the
+        snapshot each registry row actually carries."""
+        nonlocal fn, fp_count, claims, merges, quarantines
+        nonlocal digest_bytes, delta_bytes, pushback_bytes
+        nonlocal rejected_frames, corrupted_rows, repaired_rows
+        nonlocal corrupt_done
+        if tp.authoritative:
+            registry.admit_many({p: as_clock(bloom[p]) for p in peers})
+        else:
+            for p in peers:
+                nodes[p].set_cells(bloom[p])
+                vec_by_crc[wire.cells_crc(bloom[p])] = vec[p].copy()
+        if (corrupt_at is not None and not corrupt_done
+                and rounds_done - 1 >= corrupt_at[0]):
+            pid_c = pid_of[corrupt_at[1]]
+            if pid_c in registry and registry.row_alive(pid_c):
+                from repro.fleet import chaos as chaos_mod
+                chaos_mod.corrupt_registry_row(registry, pid_c,
+                                               seed=chaos.seed)
+                corrupt_done = True
+        local = as_clock(bloom[observer])
+        audit_mark = len(obs.audit.records)
+        merged, report = ft.anti_entropy_session(registry, local, tp, fg_cfg)
+        digest_bytes += report.digest_bytes
+        delta_bytes += report.delta_bytes
+        pushback_bytes += report.pushback_bytes
+        rejected_frames += len(report.rejected)
+        corrupted_rows += len(report.corrupted)
+        repaired_rows += len(report.repaired)
+
+        # what does each registry row causally contain now?  Fresh or
+        # repair pulls replace the row with the frame's snapshot; pulls
+        # into a live row merge with it (§3 receive rule)
+        if tp.authoritative:
+            for p in peers:
+                reg_truth[pid_of[p]] = vec[p].copy()
+        else:
+            for rec in obs.audit.records[audit_mark:]:
+                if rec.kind != "frame_ingest":
+                    continue
+                p = by_spid.get(rec.peer_id)
+                if p is None:
+                    continue
+                pid = pid_of[p]
+                frame_vec = vec_by_crc.get(int(rec.peer_crc))
+                if frame_vec is None:
+                    reg_truth[pid] = None
+                elif pid in report.repaired or pid not in reg_truth:
+                    reg_truth[pid] = frame_vec.copy()
+                elif reg_truth[pid] is not None:
+                    reg_truth[pid] = np.maximum(reg_truth[pid], frame_vec)
+
+        vo = vec[observer]
+        truth_of: dict[str, bool] = {}
+        for p in peers:
+            pid = pid_of[p]
+            if pid not in registry:
+                continue           # digest dropped before first ingest
+            s = registry.slot_of(pid)
+            if not bool(report.view.alive[s]):
+                continue           # quarantined this round: no verdict
+            vp = reg_truth.get(pid)
+            if vp is None:
+                continue           # row snapshot unknowable: not scored
+            code = int(report.view.status[s])
+            p_le_o = bool(np.all(vp <= vo))
+            o_le_p = bool(np.all(vo <= vp))
+            if code == fr.FORKED:
+                quarantines += 1
+                truth_of[str(pid)] = not (p_le_o or o_le_p)
+                if p_le_o or o_le_p:
+                    fn += 1        # §3 violation: can never happen
+                continue
+            claims += 1
+            predicted.append(float(report.view.fp[s]))
+            truth_ok = {
+                fr.ANCESTOR: p_le_o,
+                fr.SAME: p_le_o and o_le_p,
+                fr.DESCENDANT: o_le_p,
+            }[code]
+            truth_of[str(pid)] = truth_ok
+            if not truth_ok:
+                fp_count += 1
+
+        for rec in obs.audit.records[audit_mark:]:
+            if rec.kind == "verdict" and rec.peer_id in truth_of:
+                obs.audit.annotate_truth(rec, truth_of[rec.peer_id])
+
+        # commit: the union's causal content is the join of the
+        # SNAPSHOTS its rows carried, not the peers' current clocks
+        accept_ids = [p for p in peers if pid_of[p] in registry
+                      and report.accepted[registry.slot_of(pid_of[p])]]
+        merges += len(accept_ids)
+        if accept_ids:
+            merged_np = np.asarray(merged.logical_cells(), np.int64)
+            union_vec = vo.copy()
+            union_known = True
+            for p in accept_ids:
+                vp = reg_truth.get(pid_of[p])
+                if vp is None:
+                    union_known = False
+                else:
+                    np.maximum(union_vec, vp, out=union_vec)
+            np.maximum(bloom[observer], merged_np, out=bloom[observer])
+            if union_known:
+                np.maximum(vec[observer], union_vec, out=vec[observer])
+            if fg_cfg.push_back:
+                for p in accept_ids:
+                    if (not tp.authoritative
+                            and pid_of[p] in report.unreachable):
+                        continue   # chaos ate the push: peer never saw it
+                    np.maximum(bloom[p], merged_np, out=bloom[p])
+                    if union_known:
+                        np.maximum(vec[p], union_vec, out=vec[p])
+                    # the session broadcast the union into this row (on
+                    # non-authoritative fabrics: only because the push
+                    # was acknowledged)
+                    reg_truth[pid_of[p]] = (union_vec.copy()
+                                            if union_known else None)
+
+    last_state = None
     try:
         for t, _src, bloom, vec in _replay(cfg, rng, idx):
             if t not in round_marks:
@@ -322,6 +504,10 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
 
             # ---- one audited gossip round at the observer ----
             rounds_done += 1
+            last_state = (bloom, vec)
+            if chaos is not None:
+                chaos_round(bloom, vec)
+                continue
             if tp.authoritative:
                 registry.admit_many({p: as_clock(bloom[p]) for p in peers})
             else:
@@ -383,6 +569,16 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
                     for p in accept_ids:
                         bloom[p] = np.asarray(merged.logical_cells(), np.int64)
                         vec[p] = union_vec.copy()
+
+        # ---- chaos settle: faults off, no new events, prove recovery ----
+        if chaos is not None and last_state is not None:
+            chaos_tp.quiesce()
+            bloom, vec = last_state
+            for _ in range(max(settle_rounds, 0)):
+                rounds_done += 1
+                chaos_round(bloom, vec)
+            converged = all(
+                np.array_equal(bloom[p], bloom[observer]) for p in peers)
     finally:
         tp.close()
         for server in servers:
@@ -409,6 +605,11 @@ def run_gossip_sim(cfg: SimConfig, n_rounds: int = 6, observer: int = 0,
         digest_bytes=digest_bytes,
         delta_bytes=delta_bytes,
         pushback_bytes=pushback_bytes,
+        converged=converged,
+        fault_events=len(chaos_tp.schedule) if chaos_tp is not None else 0,
+        rejected_frames=rejected_frames,
+        corrupted=corrupted_rows,
+        repaired=repaired_rows,
     )
 
 

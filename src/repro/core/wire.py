@@ -66,6 +66,19 @@ class WireFormatError(ValueError):
     """A frame failed validation: truncated, corrupted, or wrong version."""
 
 
+def _wrap_i32(value: int) -> int:
+    """Fold an integer onto the int32 two's-complement circle.
+
+    Bounded-counter semantics: wire bases are mod-2^32 positions, so a
+    host-side counter that ticked past ``INT32_MAX`` (e.g. a ClockNode's
+    int64 cells) ships as its wrapped representative instead of crashing
+    ``struct.pack`` — the wrap-subtraction compares on the receiving
+    side read it back correctly.  Identity for values already in range.
+    """
+    value = int(value) & 0xFFFFFFFF
+    return value - 0x100000000 if value >= 0x80000000 else value
+
+
 def _check_magic_version(buf: bytes, magic: bytes, kind: str) -> None:
     if len(buf) < 3:
         raise WireFormatError(
@@ -108,7 +121,7 @@ def encode_clock(snap: dict) -> bytes:
         payload = np.ascontiguousarray(cells.astype(">i4")).tobytes()
     body = _CLOCK_HDR.pack(_CLOCK_MAGIC, WIRE_VERSION, code,
                            int(snap["k"]), cells.shape[0],
-                           int(snap["base"])) + payload
+                           _wrap_i32(snap["base"])) + payload
     return body + _CRC.pack(zlib.crc32(body))
 
 
@@ -195,7 +208,7 @@ def encode_digest(d: ClockDigest) -> bytes:
     if len(pid) > 255:
         raise ValueError(f"peer_id too long for wire ({len(pid)} bytes)")
     body = _DIGEST_HDR.pack(_DIGEST_MAGIC, WIRE_VERSION, d.k, len(pid),
-                            d.m, d.clock_sum, d.base, d.crc) + pid
+                            d.m, d.clock_sum, _wrap_i32(d.base), d.crc) + pid
     return body + _CRC.pack(zlib.crc32(body))
 
 

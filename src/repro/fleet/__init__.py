@@ -10,9 +10,13 @@ is batch-oriented.  This package provides that machinery:
 - ``transport`` — the pluggable gossip fabric: one session protocol
   (digest → classify → delta → union → push-back) over loopback,
   mesh-collective (ppermute digest ring), and TCP socket transports;
+- ``chaos``     — seeded, replayable fault injection
+  (``ChaosTransport`` wraps any fabric: drops, duplicates, reorders,
+  damaged frames, mid-session crashes, healing partitions);
 - ``monitor``   — fleet health views built on the tiled all-pairs
   Pallas kernel (fork components, stragglers, fp histograms).
 """
+from repro.fleet.chaos import ChaosConfig, ChaosTransport, FaultEvent
 from repro.fleet.registry import (
     ANCESTOR,
     DEAD,
@@ -48,6 +52,9 @@ __all__ = [
     "SocketTransport",
     "ClockNode",
     "ClockPeerServer",
+    "ChaosConfig",
+    "ChaosTransport",
+    "FaultEvent",
     "FleetHealth",
     "fleet_health",
     "ANCESTOR",

@@ -57,6 +57,18 @@ class GossipConfig:
     # instrumentation override for this config; sessions fall back to
     # ``policy.observer`` and then the registry's policy when None
     observer: Any = None
+    # self-stabilization: verify every alive registry row against its
+    # recorded CRC at the top of each session; corrupted rows are
+    # quarantined and (on a non-authoritative fabric) repaired by
+    # forcing the delta phase to re-pull them from any peer whose
+    # digest covers the row
+    verify_rows: bool = False
+    # paper §3 pure receive rule: merge FORKED (concurrent) peers too
+    # instead of quarantining them.  Quarantine treats a fork as replica
+    # divergence to investigate; a gossip fleet whose nodes legitimately
+    # tick concurrently (the chaos/convergence harness) needs forks to
+    # MERGE or concurrent peers could never reconverge.
+    merge_forked: bool = False
 
     def __post_init__(self):
         if self.fp_threshold is not None:
@@ -88,6 +100,9 @@ class GossipReport:
     transport: str = "loopback"   # fabric the session ran over
     shards: int = 1               # device shards the registry slab spans
     unreachable: tuple = ()       # peers skipped mid-session (socket)
+    rejected: tuple = ()          # peers whose pulled frame failed decode
+    corrupted: tuple = ()         # rows that failed the CRC integrity check
+    repaired: tuple = ()          # corrupted rows re-pulled this session
 
     @property
     def n_accepted(self) -> int:
@@ -108,6 +123,9 @@ class GossipReport:
             f"wire={self.wire_bytes}B[{self.transport}]"
             + (f" unreachable={len(self.unreachable)}"
                if self.unreachable else "")
+            + (f" rejected={len(self.rejected)}" if self.rejected else "")
+            + (f" corrupted={len(self.corrupted)}"
+               f" repaired={len(self.repaired)}" if self.corrupted else "")
         )
 
 

@@ -60,6 +60,7 @@ import numpy as np
 
 from repro.causal import CausalEngine, CausalPolicy, PackedSlab
 from repro.core import clock as bc
+from repro.core import wire
 from repro.kernels import pack
 from repro.obs.observer import resolve
 from repro.sharding import FLEET_AXIS, slab_shardings
@@ -73,7 +74,24 @@ __all__ = [
     "DESCENDANT",
     "FORKED",
     "STATUS_NAMES",
+    "NEAR_WRAP_MARGIN",
 ]
+
+INT32_MAX = np.iinfo(np.int32).max
+
+#: a row whose §4 base lands within this margin of INT32_MAX (or has
+#: already wrapped negative) is routed through promotion — the exact
+#: int32 rim compares with wrap-subtraction, so near-wrap rows can
+#: never produce an inverted le/ge bit through the packed fast path,
+#: whose in-kernel f32 sums would overflow first.  2^20 leaves room
+#: for ~a million more ticks plus the u8 residual window.
+NEAR_WRAP_MARGIN = 1 << 20
+
+
+def _near_wrap(base: np.ndarray) -> np.ndarray:
+    """Bool mask of §4 bases too close to (or past) the int32 wrap."""
+    base = np.asarray(base, np.int64)
+    return (base > INT32_MAX - NEAR_WRAP_MARGIN) | (base < 0)
 
 DEAD = -1
 ANCESTOR = 0
@@ -129,10 +147,14 @@ def _scatter_rows(cells_u8, base, sums, alive, idx, new_u8, new_base, new_sums):
 @jax.jit
 def _union_rows_packed(cells_u8, base, mask, local_cells):
     """max(local, max over masked logical rows); the widen fuses with the
-    reduce, so the only slab read is the u8 residuals."""
+    reduce, so the only slab read is the u8 residuals.  The max is the
+    wrap-safe ``local + relu(row - local)`` derivation (bounded-counter
+    semantics) — bit-identical to a direct maximum in the sane range,
+    correct when a row's base has wrapped past INT32_MAX."""
     logical = cells_u8.astype(jnp.int32) + base[:, None]
-    masked = jnp.where(mask[:, None], logical, 0)
-    return jnp.maximum(local_cells, jnp.max(masked, axis=0))
+    gain = jnp.where(mask[:, None],
+                     jnp.maximum(logical - local_cells, 0), 0)
+    return local_cells + jnp.max(gain, axis=0)
 
 
 @jax.jit
@@ -187,6 +209,10 @@ class ClockRegistry:
         self.alive = self._place1d(jnp.zeros((capacity,), bool))
         self._alive_host = np.zeros(capacity, bool)
         self._base_host = np.zeros(capacity, np.int64)
+        # per-slot CRC32 of the logical cells, written at every mutation:
+        # the ground truth check_integrity() verifies the slab against
+        # (corruption detection on admit/union, repaired via gossip)
+        self._crc_host = np.zeros(capacity, np.int64)
         self._wide: dict[int, np.ndarray] = {}   # promoted int32 rows
         self._mat: jax.Array | None = None       # materialized i32 cache
         self._slot_of: dict = {}
@@ -219,6 +245,11 @@ class ClockRegistry:
 
     def peer_ids(self) -> list:
         return list(self._slot_of)
+
+    def row_alive(self, peer_id) -> bool:
+        """True when the peer's row is present AND not quarantined."""
+        slot = self._slot_of.get(peer_id)
+        return slot is not None and bool(self._alive_host[slot])
 
     @property
     def packed(self) -> bool:
@@ -321,17 +352,24 @@ class ClockRegistry:
         self.sums = self._place1d(sums)
         self.alive = self._place1d(alive)
         ok_h = np.asarray(ok)
-        self._base_host[idx] = np.asarray(new_base)
+        base_h = np.asarray(new_base)
+        # near-wrap guard: a base within NEAR_WRAP_MARGIN of INT32_MAX
+        # (or already wrapped) rides the exact int32 rim via promotion —
+        # the packed path's in-kernel sums are not wrap-safe
+        nw_h = _near_wrap(base_h)
+        logical_h = np.asarray(logical)
+        self._base_host[idx] = base_h
         self._alive_host[idx] = True
         promoted = demoted = 0
         for pos, slot in enumerate(idx):
-            if ok_h[pos]:
+            self._crc_host[slot] = wire.cells_crc(logical_h[pos])
+            if ok_h[pos] and not nw_h[pos]:
                 if self._wide.pop(slot, None) is not None:
                     demoted += 1               # demotion: row packs again
-            else:                              # promotion: span > U8_MAX
+            else:                  # promotion: span > U8_MAX or near-wrap
                 if slot not in self._wide:
                     promoted += 1
-                self._wide[slot] = np.asarray(logical[pos])
+                self._wide[slot] = logical_h[pos].copy()
         if promoted:
             self.obs.metrics.counter("registry_promotions").inc(promoted)
         if demoted:
@@ -343,6 +381,44 @@ class ClockRegistry:
         if obs:
             obs.metrics.gauge("registry_occupancy").set(len(self._slot_of))
             obs.metrics.gauge("registry_wide_rows").set(len(self._wide))
+
+    # ---- self-stabilization: row integrity ----
+    def check_integrity(self) -> list:
+        """Verify every alive row against the CRC recorded when it was
+        written; returns the peer ids whose slab state no longer hashes
+        to it (bit rot, a bad scatter, hostile mutation).
+
+        The CRC is over the canonical logical cells
+        (``core.wire.cells_crc``), so packed and promoted rows verify
+        identically.  Detection only — callers quarantine and repair
+        via :meth:`quarantine_rows` + the gossip delta pull (the session
+        protocol does both when ``GossipConfig.verify_rows`` is set).
+        """
+        mat = np.asarray(self._materialized())
+        bad = []
+        for pid, slot in self._slot_of.items():
+            if not self._alive_host[slot]:
+                continue
+            if wire.cells_crc(mat[slot]) != int(self._crc_host[slot]):
+                bad.append(pid)
+        if bad:
+            self.obs.metrics.counter("registry_corrupt_rows").inc(len(bad))
+        return bad
+
+    def quarantine_rows(self, peer_ids) -> None:
+        """Mark corrupted rows dead WITHOUT freeing their slots: the
+        peer stays known (``slot_of`` keeps resolving) but classify /
+        union / all_pairs ignore the poisoned cells.  A subsequent
+        ``update_many`` — e.g. the session's forced delta re-pull from
+        any peer whose digest covers the row — rewrites the row, marks
+        it alive again, and refreshes its CRC."""
+        idx = [self._slot_of[pid] for pid in peer_ids]
+        if not idx:
+            return
+        self.alive = self._place1d(
+            self.alive.at[jnp.asarray(idx)].set(False))
+        self._alive_host[idx] = False
+        self._mat = None
 
     def get(self, peer_id) -> bc.BloomClock:
         slot = self._slot_of[peer_id]
@@ -433,7 +509,9 @@ class ClockRegistry:
             if wsel:
                 rows = rows.at[jnp.asarray([p for p, _ in wsel])].set(
                     jnp.asarray(np.stack([self._wide[s] for _, s in wsel])))
-            merged = jnp.maximum(local_cells, jnp.max(rows, axis=0))
+            # wrap-safe max (same derivation as _union_rows_packed)
+            merged = local_cells + jnp.maximum(
+                jnp.max(rows - local_cells, axis=0), 0)
         return bc.BloomClock(
             cells=merged, base=jnp.zeros((), jnp.int32), k=self.k)
 
@@ -457,12 +535,16 @@ class ClockRegistry:
         self.sums = self._place1d(sums)
         midx = np.flatnonzero(np.asarray(mask))
         self._base_host[midx] = int(row_base[0])
-        packed_ok = bool(ok[0])
+        row_np = np.asarray(logical)
+        self._crc_host[midx] = wire.cells_crc(row_np)
+        # same near-wrap guard as _write: a union row pushed back near
+        # the int32 wrap stays on the exact rim
+        packed_ok = bool(ok[0]) and not bool(_near_wrap(
+            np.asarray([int(row_base[0])]))[0])
         if packed_ok:
             for slot in midx:
                 self._wide.pop(int(slot), None)
         else:
-            row_np = np.asarray(logical)
             for slot in midx:
                 self._wide[int(slot)] = row_np
         self._mat = None

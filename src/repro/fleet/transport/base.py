@@ -49,8 +49,15 @@ class Transport(abc.ABC):
         # reach.  A transport that skips-and-reports (socket) fills it
         # per round; the session audits the entries and surfaces them
         # on ``GossipReport.unreachable`` instead of aborting.
-        # In-process transports never populate it.
+        # In-process transports only populate it under fault injection
+        # (``fleet.chaos.ChaosTransport`` wraps any fabric).
         self.unreachable: dict = {}
+
+    def _begin_round(self) -> None:
+        """Reset per-round skip state.  Every transport's ``digests()``
+        calls this first, so each session round sees only its own skips
+        — including faults a wrapping ``ChaosTransport`` injects."""
+        self.unreachable = {}
 
     @abc.abstractmethod
     def digests(self) -> tuple[dict[str, wire.ClockDigest], int]:

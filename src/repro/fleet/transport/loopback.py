@@ -27,6 +27,7 @@ class LoopbackTransport(Transport):
         self.registry = registry
 
     def digests(self) -> tuple[dict[str, wire.ClockDigest], int]:
+        self._begin_round()
         return {}, 0
 
     def pull(self, peer_ids) -> tuple[dict[str, bytes], int]:

@@ -93,6 +93,7 @@ class MeshCollectiveTransport(Transport):
         ring actually circulated: each of the ``d - 1`` hops delivers
         one foreign shard of every vector to this node.
         """
+        self._begin_round()
         r = self.registry
         sums, alive, base = jax.device_get(
             self._ring(r.sums, r.alive, r.base))

@@ -9,10 +9,16 @@ and WHAT the node decides is shared, bit-for-bit, across fabrics:
    transports (loopback / mesh-collective) skip ingest entirely: the
    session registry already IS the peer state.
 2. **delta pull** — only peers whose key differs from what this node
-   last ingested are pulled, as ``core.wire`` clock frames, decoded
-   (validated — truncated/corrupted frames raise, never merge) and
-   scattered into the registry in one ``admit_many``/``update_many``
-   batch.
+   last ingested are pulled, as ``core.wire`` clock frames.  A frame
+   that fails decode (truncated / bit-flipped / version-skewed) is
+   **rejected cleanly**: the peer keeps its previous row, lands on
+   ``GossipReport.rejected`` with a ``frame_rejected`` audit record,
+   and the round continues — one hostile frame never kills a session.
+   Decoded rows are **merged** into existing rows (§3 receive rule),
+   which makes duplicated and reordered deliveries idempotent: a stale
+   duplicate can only re-assert history the row already contains.  Each
+   ingested frame is audited (``frame_ingest``) in realized order, so a
+   chaos run's message schedule replays from the trail.
 3. **classify** — one ``registry.classify_all`` device call through the
    ``CausalEngine`` (shard_map'd transparently on a mesh-sharded slab).
 4. **policy** — quarantine FORKED peers, skip stragglers, gate the
@@ -67,36 +73,83 @@ def _session_observer(cfg: GossipConfig, registry: reg.ClockRegistry):
 
 
 def _ingest_delta(registry: reg.ClockRegistry, transport: Transport,
-                  obs) -> tuple[int, int]:
+                  obs) -> tuple[int, int, dict, set]:
     """Digest exchange + delta pull into the session registry.
 
-    Returns measured (digest_bytes, delta_bytes).  Peers advertised with
-    an unchanged content key are skipped; vanished peers are left in the
-    registry (liveness is the registry owner's policy, not the wire's).
+    Returns measured (digest_bytes, delta_bytes, rejected, revived) —
+    ``revived`` is the pids whose quarantined (corrupt) row this pull
+    rewrote, i.e. the gossip repairs that landed this session.
+    Peers advertised with an unchanged content key are skipped; vanished
+    peers are left in the registry (liveness is the registry owner's
+    policy, not the wire's).
+
+    Hostile-fleet hardening:
+
+    - a frame that fails ``wire`` decode is dropped for THIS peer only
+      (``rejected[pid] = reason``, audited as ``frame_rejected``); its
+      ``have`` key is not advanced, so the next round re-pulls it;
+    - a decoded row is **merged** with the live row it updates (§3
+      receive rule) rather than overwriting it, so duplicated, delayed,
+      or reordered deliveries are idempotent — a stale frame can only
+      re-assert history the row already contains.  A quarantined
+      (corrupt) row is replaced outright: merging would launder the
+      corruption into the fresh pull;
+    - every ingested frame leaves a ``frame_ingest`` audit record, which
+      is the realized message order a replay needs.
     """
     with obs.trace.span("gossip.digest") as sp:
         digests, digest_bytes = transport.digests()
         sp.set(peers=len(digests), bytes=digest_bytes)
     if transport.authoritative:
-        return digest_bytes, 0
+        return digest_bytes, 0, {}, set()
     wanted = [pid for pid, d in digests.items()
               if transport.have.get(pid) != d.key]
     with obs.trace.span("gossip.pull", wanted=len(wanted)) as sp:
         if not wanted:
             sp.set(bytes=0)
-            return digest_bytes, 0
+            return digest_bytes, 0, {}, set()
         frames, delta_bytes = transport.pull(wanted)
         sp.set(pulled=len(frames), bytes=delta_bytes)
-        clocks = {pid: bc.from_wire(frame) for pid, frame in frames.items()}
-        known = {pid: c for pid, c in clocks.items() if pid in registry}
-        fresh = {pid: c for pid, c in clocks.items() if pid not in registry}
+        clocks, rejected = {}, {}
+        for pid, frame in frames.items():
+            try:
+                clocks[pid] = bc.from_wire(frame)
+            except wire.WireFormatError as e:
+                rejected[pid] = str(e)
+                obs.audit.record("frame_rejected", pid,
+                                 transport=transport.name, detail=str(e))
+                obs.metrics.counter("frames_rejected",
+                                    transport=transport.name).inc()
+        known, fresh, revived = {}, {}, set()
+        for pid, c in clocks.items():
+            if pid not in registry:
+                fresh[pid] = c
+            elif registry.row_alive(pid):
+                known[pid] = bc.merge(registry.get(pid), c)
+            else:
+                known[pid] = c       # quarantined row: replace, don't merge
+                revived.add(pid)
         if known:
             registry.update_many(known)
         if fresh:
             registry.admit_many(fresh)
+        if obs.audit:
+            for pid, c in clocks.items():
+                obs.audit.record(
+                    "frame_ingest", pid, transport=transport.name,
+                    peer_crc=wire.cells_crc(
+                        np.asarray(c.logical_cells())))
         for pid in clocks:
-            transport.have[pid] = digests[pid].key
-    return digest_bytes, delta_bytes
+            # record the key of the row we now HOLD (not the advertised
+            # key): if a delayed/duplicated frame left the row stale, the
+            # keys differ and the next digest exchange re-pulls the peer
+            row = known[pid] if pid in known else fresh[pid]
+            transport.have[pid] = (
+                wire.cells_crc(np.asarray(row.logical_cells())),
+                registry.m)
+        if rejected:
+            sp.set(rejected=len(rejected))
+    return digest_bytes, delta_bytes, rejected, revived
 
 
 def _audit_verdicts(obs, registry: reg.ClockRegistry,
@@ -149,14 +202,50 @@ def anti_entropy_session(
     t0 = time.perf_counter_ns()
     with obs.trace.span("gossip.session", transport=transport.name,
                         shards=registry.n_shards) as sess_sp:
-        digest_bytes, delta_bytes = _ingest_delta(registry, transport, obs)
+        corrupted: tuple = ()
+        if cfg.verify_rows:
+            with obs.trace.span("gossip.verify") as sp:
+                bad = registry.check_integrity()
+                sp.set(corrupted=len(bad))
+            if bad:
+                registry.quarantine_rows(bad)
+                for pid in bad:
+                    obs.audit.record(
+                        "row_corrupt", pid, transport=transport.name,
+                        detail="registry row CRC mismatch; quarantined "
+                               "pending gossip repair")
+                    obs.metrics.counter("rows_corrupt",
+                                        transport=transport.name).inc()
+                    if not transport.authoritative:
+                        # force the delta phase to re-pull the row from
+                        # any peer whose digest covers it
+                        transport.have.pop(pid, None)
+                corrupted = tuple(sorted(bad, key=str))
+
+        digest_bytes, delta_bytes, rejected, revived = _ingest_delta(
+            registry, transport, obs)
+
+        # repairs are pulls that rewrote a quarantined row — including
+        # rows quarantined in an EARLIER session whose re-pull the fabric
+        # kept dropping until now
+        repaired = tuple(sorted(revived, key=str))
+        for pid in repaired:
+            obs.audit.record("row_repaired", pid, transport=transport.name,
+                             detail="corrupt row replaced by re-pulled "
+                                    "peer frame")
+            obs.metrics.counter("rows_repaired",
+                                transport=transport.name).inc()
 
         with obs.trace.span("gossip.classify") as sp:
             view = registry.classify_all(local)
             sp.set(engine=view.engine, alive=int(view.alive.sum()))
         alive = view.alive
 
-        quarantined = alive & (view.status == reg.FORKED)
+        forked = alive & (view.status == reg.FORKED)
+        # §3 pure receive rule merges concurrent histories; the default
+        # policy instead quarantines them as suspected replica divergence
+        quarantined = (np.zeros_like(forked) if cfg.merge_forked
+                       else forked)
 
         stragglers = np.zeros_like(alive)
         if alive.any():
@@ -185,20 +274,31 @@ def anti_entropy_session(
                 with obs.trace.span("gossip.push") as sp:
                     snap = bc.to_wire(merged)
                     frame = wire.encode_clock(snap)
-                    registry.broadcast(accepted, merged)
                     accepted_ids = [pid for pid in registry.peer_ids()
                                     if accepted[registry.slot_of(pid)]]
                     pushback_bytes = transport.push(accepted_ids, frame)
                     sp.set(peers=len(accepted_ids), bytes=pushback_bytes)
-                    if not transport.authoritative:
+                    if transport.authoritative:
+                        registry.broadcast(accepted, merged)
+                    else:
+                        # a staging row mirrors its PEER: only rows whose
+                        # push was acknowledged may claim the union —
+                        # writing it into an undelivered peer's row would
+                        # fork the row from the peer it stands for
+                        delivered = [pid for pid in accepted_ids
+                                     if pid not in transport.unreachable]
+                        dmask = np.zeros_like(accepted)
+                        for pid in delivered:
+                            dmask[registry.slot_of(pid)] = True
+                        if dmask.any():
+                            registry.broadcast(dmask, merged)
                         # the union row is now what those peers hold
                         # (unless they tick first, which the next digest
                         # exchange sees)
                         key = wire.digest_of("", snap["cells"],
                                              snap["base"], snap["k"]).key
-                        for pid in accepted_ids:
-                            if pid not in transport.unreachable:
-                                transport.have[pid] = key
+                        for pid in delivered:
+                            transport.have[pid] = key
 
         # peers the transport skipped-and-reported in ANY phase this
         # round (socket connect/timeout/protocol failures): audit +
@@ -212,7 +312,9 @@ def anti_entropy_session(
 
         sess_sp.set(accepted=int(accepted.sum()),
                     quarantined=int(quarantined.sum()),
-                    unreachable=len(unreachable))
+                    unreachable=len(unreachable),
+                    rejected=len(rejected),
+                    corrupted=len(corrupted))
 
     if obs.metrics:
         ms = (time.perf_counter_ns() - t0) / 1e6
@@ -249,4 +351,7 @@ def anti_entropy_session(
         transport=transport.name,
         shards=registry.n_shards,
         unreachable=tuple(sorted(unreachable)),
+        rejected=tuple(sorted(rejected, key=str)),
+        corrupted=corrupted,
+        repaired=repaired,
     )

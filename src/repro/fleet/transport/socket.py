@@ -30,6 +30,7 @@ import socket
 import socketserver
 import struct
 import threading
+import time
 
 import numpy as np
 
@@ -57,9 +58,28 @@ class PeerRejected(TransportError):
     so sessions let it propagate instead of skip-and-report."""
 
 
-def _recv_exact(sock: socket.socket, n: int) -> bytes:
+def _recv_exact(sock: socket.socket, n: int,
+                deadline: float | None = None) -> bytes:
+    """Read exactly ``n`` bytes, bounded by an absolute ``deadline``.
+
+    A per-recv socket timeout alone does NOT bound a whole message: a
+    peer that accepts the connection and then trickles one byte per
+    almost-timeout (or stalls mid-frame after the header) resets the
+    clock on every chunk, so the caller could block for ~n × timeout.
+    With a deadline (``time.monotonic()`` instant), the remaining budget
+    shrinks as chunks arrive and a mid-frame stall raises
+    ``socket.timeout`` — an ``OSError`` the transport's skip-and-report
+    path turns into an ``unreachable`` entry, never a dead round.
+    """
     buf = bytearray()
     while len(buf) < n:
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise socket.timeout(
+                    f"message deadline exhausted mid-frame "
+                    f"({len(buf)}/{n} bytes)")
+            sock.settimeout(remaining)
         chunk = sock.recv(n - len(buf))
         if not chunk:
             raise TransportError(
@@ -73,9 +93,10 @@ def _send_msg(sock: socket.socket, msg_type: int, payload: bytes = b"") -> None:
                  + payload)
 
 
-def _recv_msg(sock: socket.socket) -> tuple[int, bytes]:
+def _recv_msg(sock: socket.socket,
+              deadline: float | None = None) -> tuple[int, bytes]:
     length, version, msg_type = _ENVELOPE.unpack(
-        _recv_exact(sock, _ENVELOPE.size))
+        _recv_exact(sock, _ENVELOPE.size, deadline))
     if version != PROTO_VERSION:
         raise TransportError(
             f"peer speaks protocol version {version}, "
@@ -83,7 +104,7 @@ def _recv_msg(sock: socket.socket) -> tuple[int, bytes]:
     if length > _MAX_PAYLOAD:
         raise TransportError(f"refusing {length}-byte payload "
                              f"(cap {_MAX_PAYLOAD})")
-    return msg_type, _recv_exact(sock, length)
+    return msg_type, _recv_exact(sock, length, deadline)
 
 
 class ClockNode:
@@ -140,10 +161,16 @@ class ClockNode:
 
 
 class _Handler(socketserver.BaseRequestHandler):
+    #: per-request budget: a client that connects and stalls mid-frame
+    #: (or never sends) releases its daemon thread instead of pinning it
+    request_timeout = 30.0
+
     def handle(self):
         node: ClockNode = self.server.node    # type: ignore[attr-defined]
         try:
-            msg_type, payload = _recv_msg(self.request)
+            self.request.settimeout(self.request_timeout)
+            msg_type, payload = _recv_msg(
+                self.request, time.monotonic() + self.request_timeout)
             if msg_type == MSG_DIGEST:
                 _send_msg(self.request, MSG_DIGEST,
                           wire.encode_digest(node.digest()))
@@ -156,6 +183,8 @@ class _Handler(socketserver.BaseRequestHandler):
             else:
                 _send_msg(self.request, MSG_ERR,
                           f"unknown message type {msg_type}".encode())
+        except socket.timeout:
+            pass          # stalled client: drop it, free the thread
         except (wire.WireFormatError, TransportError) as e:
             try:
                 _send_msg(self.request, MSG_ERR, str(e).encode())
@@ -227,10 +256,14 @@ class SocketTransport(Transport):
     def _request(self, pid: str, msg_type: int,
                  payload: bytes = b"") -> bytes:
         host, port = self.peers[pid]
+        # one absolute deadline for the WHOLE reply: a peer that accepts
+        # then stalls (or trickles) mid-frame times out within ~timeout
+        # total, not per-recv-chunk
+        deadline = time.monotonic() + self.timeout
         with socket.create_connection((host, port),
                                       timeout=self.timeout) as sock:
             _send_msg(sock, msg_type, payload)
-            kind, reply = _recv_msg(sock)
+            kind, reply = _recv_msg(sock, deadline)
         if kind == MSG_ERR:
             raise PeerRejected(
                 f"peer {pid!r} at {host}:{port} rejected the request: "
@@ -242,7 +275,7 @@ class SocketTransport(Transport):
         return reply
 
     def digests(self) -> tuple[dict[str, wire.ClockDigest], int]:
-        self.unreachable = {}      # fresh skip list per session round
+        self._begin_round()        # fresh skip list per session round
         digs, nbytes = {}, 0
         for pid in self.peers:
             try:

@@ -218,7 +218,9 @@ def _pair_flags_u8(a_ref, b_ref, abase_ref, bbase_ref, acc,
     difference.  ``d`` spans ±U8_MAX before the base delta; the delta is
     clipped to ±(U8_MAX + 1), which preserves verdicts exactly (any
     |delta| beyond the residual range forces the verdict) and keeps d
-    inside int16."""
+    inside int16.  Already wrap-safe (bounded-counter semantics): the
+    base delta is an int32 wrap-subtraction before the clip, so two
+    near-wrap packed rows compare through their true signed gap."""
     a = a_ref[...]
     b = b_ref[...]
     d = a.astype(jnp.int16)[:, None, :] - b.astype(jnp.int16)[None, :, :]
@@ -262,9 +264,13 @@ def _packed_flags_step(refs, *, jm, with_base, m_true, bm, acc):
 def _one_vs_many_step(j, q, p, flags_ref, sums_ref, fp_ref,
                       *, n_mtiles, m, acc):
     """Shared one-vs-many body: dominance + sums accumulate across
-    m-tiles, Eq. 3 finalize on the last."""
-    le = jnp.all(q <= p, axis=1, keepdims=True)
-    ge = jnp.all(q >= p, axis=1, keepdims=True)
+    m-tiles, Eq. 3 finalize on the last.  Dominance is derived from the
+    int32 wrap-subtraction (bounded-counter semantics, same derivation
+    as ``core.clock.ordering``): bit-identical to direct compares in the
+    sane range, correct across the int32 wrap point."""
+    d = p - q
+    le = jnp.all(d >= 0, axis=1, keepdims=True)
+    ge = jnp.all(d <= 0, axis=1, keepdims=True)
     sp = jnp.sum(p, axis=1, keepdims=True).astype(jnp.float32)
     sq = jnp.broadcast_to(
         jnp.sum(q, axis=1, keepdims=True).astype(jnp.float32), sp.shape)
@@ -408,8 +414,13 @@ def _emit_rect_i32_stats(spec: CompareSpec):
         a = a_ref[...]             # [bi, bm] int32 row clocks
         b = b_ref[...]             # [bj, bm] int32 column clocks
 
-        le = jnp.all(a[:, None, :] <= b[None, :, :], axis=2)
-        ge = jnp.all(a[:, None, :] >= b[None, :, :], axis=2)
+        # wrap-subtraction dominance (bounded-counter semantics): exact
+        # for gaps < 2^31, bit-identical to direct <=/>= in that range —
+        # this is the rim engine promoted near-wrap rows ride, so it
+        # must stay correct across the int32 wrap point
+        d = a[:, None, :] - b[None, :, :]
+        le = jnp.all(d <= 0, axis=2)
+        ge = jnp.all(d >= 0, axis=2)
         sa = jnp.sum(a, axis=1, keepdims=True).astype(jnp.float32)
 
         # row sums: the (i, 0) block stays live for the whole i-row of

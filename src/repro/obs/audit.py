@@ -45,7 +45,9 @@ class AuditRecord:
     """One acted-on verdict (or transport fault) in the trail."""
 
     seq: int
-    kind: str                 # "verdict" | "peer_unreachable"
+    kind: str                 # "verdict" | "peer_unreachable" | "chaos"
+                              # | "frame_ingest" | "frame_rejected"
+                              # | "row_corrupt" | "row_repaired"
     peer_id: str
     verdict: str = ""         # STATUS_NAMES string, e.g. "ancestor"
     action: str = ""          # what the verdict drove: accept/quarantine/...
@@ -146,6 +148,17 @@ class AuditTrail:
     # ---- accounting ----
     def verdicts(self) -> list[AuditRecord]:
         return [r for r in self.records if r.kind == "verdict"]
+
+    def chaos_events(self) -> list[AuditRecord]:
+        """Realized fault schedule (``kind="chaos"``) in injection
+        order — with the seed, this is the repro of a hostile run."""
+        return [r for r in self.records if r.kind == "chaos"]
+
+    def frame_sequence(self) -> list[AuditRecord]:
+        """Realized ingest order of decoded delta frames
+        (``kind="frame_ingest"``): which frame landed in which session,
+        in order — the message schedule a chaos replay must reproduce."""
+        return [r for r in self.records if r.kind == "frame_ingest"]
 
     def mean_predicted_fp(self) -> float:
         """Mean claimed Eq. 3 fp over strict-order verdicts on record."""

@@ -1,0 +1,194 @@
+"""Adversarial wire-decode fuzz: hostile bytes never become a clock.
+
+The §3 zero-false-negative guarantee is only as strong as the decode
+layer: a truncated or bit-flipped frame that silently decoded to a
+DIFFERENT clock would corrupt a registry row and fake a causal verdict.
+So the contract under test is absolute — for every frame shape the §4
+quantizer can emit (u8-packed, promoted int32, near-wrap / wrapped
+bases, boundary residual spans):
+
+- every strict prefix (truncation at EVERY offset) raises
+  ``WireFormatError``;
+- every single-bit flip, anywhere in the frame, raises (CRC32 detects
+  all single-bit errors; the magic/version/length checks catch the
+  rest);
+- version skew raises even with a correctly recomputed CRC — a frame
+  from a future build is rejected, not misparsed;
+- trailing garbage and random byte soup raise;
+- a mutation may only ever decode to the ORIGINAL clock, bit for bit.
+
+Deterministic and dependency-free (repo idiom: the hypothesis property
+sweeps live in tests/test_wire_properties.py and skip when hypothesis
+is absent; these always run).
+"""
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import wire
+
+INT32_MAX = np.iinfo(np.int32).max
+_RNG = np.random.default_rng(0xB10C)
+
+# every §4 representation + the boundary frames the chaos harness bends:
+# min-m, full residual span, near-wrap and wrapped bases, promoted int32
+SNAPSHOTS = {
+    "u8_min_m": {"cells": _RNG.integers(0, 6, 4).astype(np.uint8),
+                 "base": 0, "k": 3},
+    "u8_span255": {"cells": np.array([0, 255] * 8, np.uint8),
+                   "base": 7, "k": 4},
+    "u8_near_wrap_base": {"cells": _RNG.integers(0, 9, 64).astype(np.uint8),
+                          "base": INT32_MAX - 3, "k": 3},
+    "u8_wrapped_base": {"cells": _RNG.integers(0, 9, 64).astype(np.uint8),
+                        "base": -(2**31) + 5, "k": 3},
+    "i32_promoted": {"cells": _RNG.integers(0, 5000, 96).astype(np.int32),
+                     "base": 0, "k": 4},
+    "i32_hot_rim": {"cells": (_RNG.integers(0, 50, 16)
+                              + INT32_MAX - 60).astype(np.int32),
+                    "base": 0, "k": 3},
+}
+NAMES = sorted(SNAPSHOTS)
+
+
+def _frame(name):
+    return wire.encode_clock(SNAPSHOTS[name])
+
+
+def _assert_decodes_original(buf, name):
+    snap = SNAPSHOTS[name]
+    got = wire.decode_clock(buf)
+    assert np.array_equal(got["cells"], np.asarray(snap["cells"]))
+    assert got["base"] == wire._wrap_i32(snap["base"])
+    assert got["k"] == snap["k"]
+
+
+def _reseal(body: bytes) -> bytes:
+    """Recompute the CRC trailer over a mutated body (an adversary who
+    keeps the checksum honest must still be stopped by the semantic
+    checks)."""
+    return body + struct.pack("!I", zlib.crc32(body))
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_roundtrip_reference(name):
+    _assert_decodes_original(_frame(name), name)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_every_truncation_rejects(name):
+    frame = _frame(name)
+    for cut in range(len(frame)):
+        with pytest.raises(wire.WireFormatError):
+            wire.decode_clock(frame[:cut])
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_every_single_bitflip_rejects(name):
+    frame = _frame(name)
+    buf = bytearray(frame)
+    for pos in range(len(frame)):
+        for bit in range(8):
+            buf[pos] ^= 1 << bit
+            with pytest.raises(wire.WireFormatError):
+                wire.decode_clock(bytes(buf))
+            buf[pos] ^= 1 << bit
+    assert bytes(buf) == frame          # restored; still decodes
+    _assert_decodes_original(frame, name)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_version_skew_rejects_even_with_valid_crc(name):
+    frame = _frame(name)
+    for ver in (0, wire.WIRE_VERSION + 1, 17, 127, 255):
+        body = bytearray(frame[:-4])
+        body[2] = ver
+        with pytest.raises(wire.WireFormatError, match="version"):
+            wire.decode_clock(_reseal(bytes(body)))
+
+
+def test_unknown_dtype_code_rejects_even_with_valid_crc():
+    frame = _frame("u8_min_m")
+    for code in (2, 3, 9, 255):
+        body = bytearray(frame[:-4])
+        body[3] = code
+        with pytest.raises(wire.WireFormatError):
+            wire.decode_clock(_reseal(bytes(body)))
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_trailing_garbage_rejects(name):
+    frame = _frame(name)
+    for tail in (b"\x00", b"\xff" * 7, _frame(name)):
+        with pytest.raises(wire.WireFormatError, match="oversized"):
+            wire.decode_clock(frame + tail)
+
+
+def test_random_byte_soup_never_decodes():
+    rng = np.random.default_rng(42)
+    for _ in range(300):
+        n = int(rng.integers(0, 600))
+        with pytest.raises(wire.WireFormatError):
+            wire.decode_clock(rng.integers(0, 256, n,
+                                           dtype=np.uint8).tobytes())
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_multibyte_corruption_never_yields_a_different_clock(name):
+    """Random multi-byte stompings: reject, or (if the mutation was a
+    no-op round-trip) decode to the untouched original — NEVER to a
+    third clock."""
+    frame = _frame(name)
+    rng = np.random.default_rng(7)
+    for _ in range(200):
+        buf = bytearray(frame)
+        for _ in range(int(rng.integers(1, 6))):
+            buf[int(rng.integers(0, len(buf)))] = int(rng.integers(0, 256))
+        mutated = bytes(buf)
+        try:
+            got = wire.decode_clock(mutated)
+        except wire.WireFormatError:
+            continue
+        assert mutated == frame
+        assert np.array_equal(got["cells"],
+                              np.asarray(SNAPSHOTS[name]["cells"]))
+
+
+# -- digest frames: same contract, a corrupted digest must not steer a
+#    wrong pull/skip decision --------------------------------------------
+
+def _digest_frame():
+    return wire.encode_digest(
+        wire.digest_of("peer-7", np.arange(33), base=INT32_MAX - 9, k=4))
+
+
+def test_digest_truncation_and_bitflips_reject():
+    frame = _digest_frame()
+    ref = wire.decode_digest(frame)
+    for cut in range(len(frame)):
+        with pytest.raises(wire.WireFormatError):
+            wire.decode_digest(frame[:cut])
+    buf = bytearray(frame)
+    for pos in range(len(frame)):
+        for bit in range(8):
+            buf[pos] ^= 1 << bit
+            with pytest.raises(wire.WireFormatError):
+                wire.decode_digest(bytes(buf))
+            buf[pos] ^= 1 << bit
+    assert wire.decode_digest(bytes(buf)) == ref
+
+
+def test_digest_version_skew_rejects_with_valid_crc():
+    frame = _digest_frame()
+    body = bytearray(frame[:-4])
+    body[2] = wire.WIRE_VERSION + 1
+    with pytest.raises(wire.WireFormatError, match="version"):
+        wire.decode_digest(_reseal(bytes(body)))
+
+
+def test_clock_and_digest_frames_do_not_cross_decode():
+    with pytest.raises(wire.WireFormatError, match="magic"):
+        wire.decode_digest(_frame("u8_min_m"))
+    with pytest.raises(wire.WireFormatError, match="magic"):
+        wire.decode_clock(_digest_frame())

@@ -45,6 +45,55 @@ def test_wire_roundtrip_property(m, base, hi, seed):
             == wire.digest_of("x", snap["cells"], snap["base"]).crc)
 
 
+@_settings
+@given(
+    m=st.integers(4, 96),
+    hi=st.sampled_from([5, 255, 5000]),             # u8-packed AND promoted
+    base=st.integers(-(2**31), 2**31 - 1),          # includes wrapped rim
+    seed=st.integers(0, 2**31 - 1),
+    mutation=st.sampled_from(
+        ["truncate", "flip1", "flip4", "append", "version", "swap"]),
+    salt=st.integers(0, 2**31 - 1),
+)
+def test_wire_mutation_fuzz(m, hi, base, seed, mutation, salt):
+    """Hostile-frame property (chaos-harness contract): ANY mutation of
+    an encoded clock frame either raises ``WireFormatError`` or decodes
+    bit-identically to the original — never to a different clock."""
+    rng = np.random.default_rng(seed)
+    if hi <= 255:
+        cells = rng.integers(0, hi + 1, m).astype(np.uint8)
+    else:
+        cells = rng.integers(-hi, hi, m).astype(np.int32)
+    snap = {"cells": cells, "base": int(base), "k": 4}
+    frame = wire.encode_clock(snap)
+
+    mrng = np.random.default_rng(salt)
+    buf = bytearray(frame)
+    if mutation == "truncate":
+        buf = buf[: int(mrng.integers(0, len(buf)))]
+    elif mutation in ("flip1", "flip4"):
+        for _ in range(1 if mutation == "flip1" else 4):
+            buf[int(mrng.integers(0, len(buf)))] ^= 1 << int(
+                mrng.integers(0, 8))
+    elif mutation == "append":
+        buf += bytes(mrng.integers(0, 256, int(mrng.integers(1, 9)),
+                                   dtype=np.uint8))
+    elif mutation == "version":
+        buf[2] = int(mrng.integers(0, 256))
+    else:                                            # swap two bytes
+        i, j = (int(x) for x in mrng.integers(0, len(buf), 2))
+        buf[i], buf[j] = buf[j], buf[i]
+    mutated = bytes(buf)
+
+    try:
+        got = wire.decode_clock(mutated)
+    except wire.WireFormatError:
+        return
+    assert mutated == frame                          # no-op mutation only
+    np.testing.assert_array_equal(got["cells"], cells)
+    assert got["base"] == wire._wrap_i32(base)
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1))
 def test_wire_roundtrip_across_shard_boundaries(seed):
