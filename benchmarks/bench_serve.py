@@ -1,0 +1,222 @@
+"""Serving-at-scale benchmarks: ``BENCH_serve.json``.
+
+Two measurements:
+
+1. ``pipeline_vs_adopt_loop`` — the streaming admission pipeline
+   (double-buffered staging + digest cache over a ``TieredRegistry``)
+   against the obvious baseline, a synchronous ``ServingEngine.
+   adopt_many`` loop at the SAME batch size.  The pipeline must win:
+   its host staging for batch t+1 overlaps the device classify of
+   batch t, and its rows are materialized batched host-side instead of
+   per-session eager dispatches.  Both records land in the JSON; the
+   compute-only baseline (``transport=None``) is gated by
+   ``--check-against``, the threaded pipeline record rides ungated as
+   ``transport="pipeline"`` (thread scheduling sits above the noise
+   floor, same rule as gossip sessions in ``bench_fleet``).
+
+2. ``serve_churn`` — the full churn driver at ≥1M sessions: arrivals,
+   Zipf queries, migrations, expiries against the hot/warm/cold tiers.
+   Reports p50/p99 admission latency, sustained QPS, per-tier
+   occupancy + movement counters, and whether the stated SLO
+   (p99 admission latency under an open-loop step burst) held.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_serve                # full 1M
+  PYTHONPATH=src python -m benchmarks.bench_serve --quick        # CI smoke
+  PYTHONPATH=src python -m benchmarks.bench_serve --check-against BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_fleet import _rec, check_against
+from repro.causal import CausalPolicy
+from repro.core import clock as bc
+from repro.core import wire
+from repro.serve.churn import ChurnConfig, run_churn
+from repro.serve.pipeline import AdmissionPipeline, PipelineConfig
+from repro.serve.tiers import TierConfig, TieredRegistry
+
+#: stated SLO for the churn leg: p99 admission latency under the
+#: open-loop per-step burst (the driver enqueues a whole step's
+#: arrivals, then drains).  Chosen ~4x the measured steady-state p99 on
+#: a CPU dev box so only a real regression trips it.
+SLO_P99_MS = 15_000.0
+
+
+def _mk_sessions(n: int, m: int, k: int, seed: int):
+    """n distinct session clocks, all ≼ the returned local clock."""
+    rng = np.random.default_rng(seed)
+    cells = rng.integers(0, 6, (n, m)).astype(np.int32)
+    local = bc.BloomClock(cells=jnp.asarray(cells.max(axis=0) + 1),
+                          base=jnp.zeros((), jnp.int32), k=k)
+    clocks = [bc.BloomClock(cells=jnp.asarray(cells[i]),
+                            base=jnp.zeros((), jnp.int32), k=k)
+              for i in range(n)]
+    return local, clocks
+
+
+def bench_pipeline_vs_adopt_loop(n: int = 4096, m: int = 256,
+                                 batch: int = 256, seed: int = 0,
+                                 records: list | None = None) -> list:
+    from repro.configs import get_smoke_config
+    from repro.models.params import init_params
+    from repro.runtime.clock_runtime import ClockConfig
+    from repro.serving.engine import ServeConfig, ServingEngine
+
+    records = records if records is not None else []
+    rows = []
+    shape = f"n{n}_m{m}_b{batch}"
+    pol = CausalPolicy(fp_threshold=1.0)
+    local, clocks = _mk_sessions(n, m, 4, seed)
+
+    # -- baseline: synchronous adopt_many loop, batch at a time --------
+    cfg32 = dataclasses.replace(get_smoke_config("qwen1_5_0_5b"),
+                                dtype="float32")
+    params = init_params(jax.random.PRNGKey(seed), cfg32)
+    eng = ServingEngine(params, cfg32, ServeConfig(max_batch=batch),
+                        ClockConfig(m=m, k=4, policy=pol), replica_id="bench")
+    eng.clock.clock = local
+    sessions = [{"sid": f"s{i}", "clock": types.SimpleNamespace(clock=c)}
+                for i, c in enumerate(clocks)]
+    # warmup compiles on a throwaway batch so neither side pays them
+    eng.adopt_many([{"sid": "warm", "clock": sessions[0]["clock"]}])
+    eng.clock.clock = local
+    t0 = time.perf_counter()
+    adopted = 0
+    for i in range(0, n, batch):
+        adopted += int(eng.adopt_many(sessions[i:i + batch]).sum())
+    t_loop = time.perf_counter() - t0
+    assert adopted >= n, f"baseline rejected sessions: {adopted}/{n}"
+    _rec(records, "serve_adopt_many_loop", shape, t_loop / n,
+         policy="fp1.0", engine="packed")
+    rows.append((f"adopt_many_loop {shape}", t_loop / n * 1e6,
+                 f"{n / t_loop:.0f} sessions/s"))
+
+    # -- pipeline: same clocks, same batch size ------------------------
+    tiers = TieredRegistry(
+        TierConfig(hot_capacity=max(batch * 2, 512),
+                   warm_capacity=max(batch * 8, 2048)),
+        m=m, k=4, policy=pol)
+    pipe = AdmissionPipeline(tiers, lambda: local,
+                             PipelineConfig(batch_size=batch))
+    # Sessions arrive as wire frames (that's what migration puts on the
+    # network); encode outside the timer, exactly as the loop baseline
+    # receives already-decoded clocks.
+    frames = [wire.encode_clock(bc.to_wire(c)) for c in clocks]
+    pipe.submit("warm", clock=clocks[0])            # compile warmup
+    pipe.drain(timeout=120)
+    t0 = time.perf_counter()
+    for i, f in enumerate(frames):
+        pipe.submit(f"p{i}", frame=f)
+    pipe.drain(timeout=600)
+    t_pipe = time.perf_counter() - t0
+    assert pipe.n_admitted >= n, \
+        f"pipeline rejected sessions: {pipe.n_admitted}/{n}"
+    speedup = t_loop / t_pipe
+    _rec(records, "serve_pipeline_admit", shape, t_pipe / n,
+         reference="serve_adopt_many_loop", speedup=speedup,
+         policy="fp1.0", engine=tiers.engine.__class__.__name__,
+         transport="pipeline")
+    rows.append((f"pipeline_admit {shape}", t_pipe / n * 1e6,
+                 f"{n / t_pipe:.0f} sessions/s, {speedup:.2f}x vs loop"))
+    pipe.close()
+    tiers.close()
+    if speedup <= 1.0:
+        print(f"# WARNING: pipeline did not beat the adopt_many loop "
+              f"({speedup:.2f}x)", file=sys.stderr)
+    return rows
+
+
+def bench_churn(cfg: ChurnConfig, records: list | None = None) -> list:
+    records = records if records is not None else []
+    report = run_churn(cfg)
+    d = report.to_dict()
+    assert report.fn_violations == 0, d
+    assert d["tier_counts"].get("cold", 0) > 0, \
+        f"cold tier never exercised: {d['tier_counts']}"
+    shape = f"s{cfg.sessions}_m{cfg.m}_b{cfg.batch_size}"
+    rec = {
+        "op": "serve_churn",
+        "shape": shape,
+        "shards": 1,
+        "ms": round(report.wall_s * 1e3, 1),
+        "speedup_vs_reference": None,
+        "reference": None,
+        "policy": f"fp{cfg.fp_threshold:g}",
+        "engine": None,
+        "transport": "pipeline",      # threaded driver: never gated
+        "digest_bytes": None,
+        "delta_bytes": None,
+        "pushback_bytes": None,
+        "serve": {**d, "slo_p99_ms": SLO_P99_MS,
+                  "slo_met": report.p99_ms <= SLO_P99_MS},
+    }
+    records.append(rec)
+    return [(f"churn {shape}", report.wall_s * 1e6 / max(1, cfg.sessions),
+             f"{report.qps:.0f} qps, p50 {report.p50_ms:.0f}ms, "
+             f"p99 {report.p99_ms:.0f}ms, slo_met="
+             f"{report.p99_ms <= SLO_P99_MS}, tiers {d['tier_counts']}")]
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="CI smoke: small churn + small adopt comparison")
+    p.add_argument("--sessions", type=int, default=1_000_000)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--json", default="BENCH_serve.json")
+    p.add_argument("--trace-dir", default=None)
+    p.add_argument("--check-against", default=None, metavar="BASELINE",
+                   help="compare against a recorded BENCH_serve.json and "
+                        "exit nonzero if any gated op got >15%% slower")
+    p.add_argument("--check-tolerance", type=float, default=0.15)
+    args = p.parse_args(argv)
+
+    records: list = []
+    if args.quick:
+        rows = bench_pipeline_vs_adopt_loop(n=1024, m=64, batch=64,
+                                            seed=args.seed, records=records)
+        rows += bench_churn(ChurnConfig.quick(seed=args.seed,
+                                              trace_dir=args.trace_dir),
+                            records=records)
+    else:
+        rows = bench_pipeline_vs_adopt_loop(n=4096, m=256, batch=256,
+                                            seed=args.seed, records=records)
+        rows += bench_churn(
+            ChurnConfig(sessions=args.sessions, seed=args.seed,
+                        audit=False, trace_dir=args.trace_dir),
+            records=records)
+    print("name,us_per_item,derived")
+    for name, us, derived in rows:
+        print(f'{name},{us:.2f},"{derived}"')
+    with open(args.json, "w") as f:
+        json.dump({"backend": jax.default_backend(),
+                   "interpret": jax.default_backend() != "tpu",
+                   "slo_p99_ms": SLO_P99_MS,
+                   "records": records}, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {len(records)} records -> {args.json}")
+    if args.check_against:
+        failures = check_against(args.check_against, records,
+                                 tolerance=args.check_tolerance)
+        if failures:
+            print(f"# REGRESSION vs {args.check_against}:", file=sys.stderr)
+            for line in failures:
+                print(f"#   {line}", file=sys.stderr)
+            sys.exit(1)
+        print(f"# no regressions vs {args.check_against} "
+              f"(tolerance {args.check_tolerance:.0%})")
+
+
+if __name__ == "__main__":
+    main()

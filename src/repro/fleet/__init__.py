@@ -25,7 +25,9 @@ from repro.fleet.registry import (
     SAME,
     STATUS_NAMES,
     ClockRegistry,
+    EvictedRow,
     FleetView,
+    view_from_classify,
 )
 from repro.fleet.gossip import GossipConfig, GossipReport, gossip_round
 from repro.fleet.monitor import FleetHealth, fleet_health
@@ -41,7 +43,9 @@ from repro.fleet.transport import (
 
 __all__ = [
     "ClockRegistry",
+    "EvictedRow",
     "FleetView",
+    "view_from_classify",
     "GossipConfig",
     "GossipReport",
     "gossip_round",

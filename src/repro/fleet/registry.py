@@ -53,6 +53,7 @@ host-side dict, so slot ``s`` deterministically lives on device
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -67,7 +68,9 @@ from repro.sharding import FLEET_AXIS, slab_shardings
 
 __all__ = [
     "ClockRegistry",
+    "EvictedRow",
     "FleetView",
+    "view_from_classify",
     "DEAD",
     "ANCESTOR",
     "SAME",
@@ -93,6 +96,13 @@ def _near_wrap(base: np.ndarray) -> np.ndarray:
     base = np.asarray(base, np.int64)
     return (base > INT32_MAX - NEAR_WRAP_MARGIN) | (base < 0)
 
+
+def _pow2_bucket(n: int) -> int:
+    """Next power of two ≥ n: batched mutations pad to these buckets so
+    the compiled scatter/gather shape count stays logarithmic under
+    churny variable-size admit/evict waves."""
+    return 1 << max(0, n - 1).bit_length() if n > 1 else n
+
 DEAD = -1
 ANCESTOR = 0
 SAME = 1
@@ -106,6 +116,27 @@ STATUS_NAMES = {
     DESCENDANT: "descendant",
     FORKED: "forked",
 }
+
+
+@dataclasses.dataclass
+class EvictedRow:
+    """One row captured for an ``on_evict`` hook, in the slab's own
+    packed representation: u8 residuals + base (plus the promoted int32
+    logical row when the slot was wide).  A tiered store (see
+    ``repro.serve.tiers``) ingests these directly — the demotion path
+    never materializes the full slab."""
+
+    cells_u8: np.ndarray      # [m] uint8 residuals
+    base: int                 # §4 window offset
+    sum: float                # cached clock sum (Eq. 3 input)
+    wide: Optional[np.ndarray] = None   # promoted int32 logical row
+
+    def logical(self) -> np.ndarray:
+        """Materialized int32 logical cells (mod-2^32 circle)."""
+        if self.wide is not None:
+            return np.asarray(self.wide, np.int32)
+        return (self.cells_u8.astype(np.int64)
+                + int(self.base)).astype(np.int32)
 
 
 @dataclasses.dataclass
@@ -133,6 +164,37 @@ class FleetView:
         ``causal.ClassifyResult.confident`` (exact verdicts — SAME,
         FORKED, DEAD — carry fp 0 and are always confident)."""
         return self.fp <= threshold
+
+
+def view_from_classify(res, alive: np.ndarray, capacity: int,
+                       local_sum: float | None = None) -> FleetView:
+    """Fold a host-side ``ClassifyResult`` into a ``FleetView``.
+
+    The ONE place classify flags become status codes + claimed-direction
+    fp — ``ClockRegistry.classify_all`` and the tiered registry
+    (``repro.serve.tiers``) both route through it, so a tier split can
+    never drift from the flat slab's verdict semantics.
+    """
+    alive = np.asarray(alive, bool)
+    p_le_q = res.after()           # peer ≼ local
+    q_le_p = res.before()          # local ≼ peer
+    equal = res.equal()
+    status = np.full(capacity, FORKED, np.int8)
+    status[p_le_q] = ANCESTOR
+    status[q_le_p] = DESCENDANT
+    status[equal] = SAME
+    status[~alive] = DEAD
+    # fp of the direction actually claimed; SAME and FORKED are exact
+    fp = np.asarray(res.claimed_fp(), np.float32)
+    fp[~alive] = 0.0
+    return FleetView(
+        status=status,
+        fp=fp,
+        sums=res.sum_p,
+        alive=alive.copy(),
+        local_sum=float(res.sum_q) if local_sum is None else local_sum,
+        engine=res.engine or "",
+    )
 
 
 @jax.jit
@@ -217,6 +279,12 @@ class ClockRegistry:
         self._mat: jax.Array | None = None       # materialized i32 cache
         self._slot_of: dict = {}
         self._free: list[int] = list(range(capacity - 1, -1, -1))
+        #: demotion hook: called as ``on_evict({peer_id: EvictedRow})``
+        #: with every ALIVE row an ``evict_many`` is about to free —
+        #: quarantined (corrupt) rows are never handed out.  A tiered
+        #: store installs this to catch hot-tier evictions (see
+        #: ``repro.serve.tiers``).
+        self.on_evict: Optional[Callable[[dict], None]] = None
 
     @property
     def n_shards(self) -> int:
@@ -324,25 +392,72 @@ class ClockRegistry:
         idx = [self._slot_of[pid] for pid in peer_ids]
         if not idx:
             return
+        captured = self._capture_rows(peer_ids, idx)
         with self.obs.trace.span("registry.evict", n=len(idx)):
             for pid in peer_ids:
                 del self._slot_of[pid]
+            pidx = idx + [idx[-1]] * (_pow2_bucket(len(idx)) - len(idx))
             self.alive = self._place1d(
-                self.alive.at[jnp.asarray(idx)].set(False))
+                self.alive.at[jnp.asarray(pidx)].set(False))
             self._alive_host[idx] = False
             for slot in idx:
                 self._wide.pop(slot, None)
             self._free.extend(idx)
         self.obs.metrics.counter("registry_evictions").inc(len(idx))
         self._note_occupancy()
+        if captured:
+            self.on_evict(captured)
+
+    def _capture_rows(self, peer_ids: list, idx: list) -> Optional[dict]:
+        """Snapshot the alive rows an eviction is about to free, in the
+        packed representation (one gathered device transfer for the
+        batch, not a full-slab materialize)."""
+        if self.on_evict is None:
+            return None
+        live = [(pid, slot) for pid, slot in zip(peer_ids, idx)
+                if self._alive_host[slot]]
+        if not live:
+            return None
+        slots = [slot for _, slot in live]
+        slots += [slots[-1]] * (_pow2_bucket(len(slots)) - len(slots))
+        jidx = jnp.asarray(slots)
+        u8 = np.asarray(jnp.take(self.cells_u8, jidx, axis=0))
+        sums = np.asarray(jnp.take(self.sums, jidx))
+        return {
+            pid: EvictedRow(
+                cells_u8=u8[pos].copy(),
+                base=int(self._base_host[slot]),
+                sum=float(sums[pos]),
+                wide=(None if slot not in self._wide
+                      else self._wide[slot].copy()))
+            for pos, (pid, slot) in enumerate(live)
+        }
 
     def evict(self, peer_id) -> None:
         self.evict_many([peer_id])
 
     def _write(self, idx: list, clocks: list) -> None:
-        logical = jnp.stack(
-            [c.logical_cells().astype(jnp.int32) for c in clocks])
-        new_sums = jnp.stack([bc.clock_sum(c) for c in clocks])
+        # materialize logical rows host-side (int32 wraparound kept via
+        # the mod-2^32 fold) and sum them in ONE batched op: per-clock
+        # eager dispatches dominate bulk admits otherwise
+        n0 = len(clocks)
+        n = _pow2_bucket(n0)
+        logical_h = np.empty((n, self.m), np.int32)
+        for pos, c in enumerate(clocks):
+            cells = np.asarray(c.cells, np.int64)
+            b = int(np.asarray(c.base))
+            logical_h[pos] = ((cells + b) & 0xFFFFFFFF).astype(
+                np.uint32).view(np.int32)
+        if n > n0:
+            # pad to a power-of-two bucket by repeating the last row at
+            # its own slot — the duplicate scatter rewrites identical
+            # data, and the compiled shape count stays logarithmic
+            logical_h[n0:] = logical_h[n0 - 1]
+            idx = list(idx) + [idx[-1]] * (n - n0)
+        logical = jnp.asarray(logical_h)
+        new_sums = bc.clock_sum(bc.BloomClock(
+            cells=logical, base=jnp.zeros(n, jnp.int32),
+            k=clocks[0].k))
         new_u8, new_base, ok = pack.pack_rows(logical)
         cells_u8, base, sums, alive = _scatter_rows(
             self.cells_u8, self.base, self.sums, self.alive,
@@ -357,7 +472,6 @@ class ClockRegistry:
         # (or already wrapped) rides the exact int32 rim via promotion —
         # the packed path's in-kernel sums are not wrap-safe
         nw_h = _near_wrap(base_h)
-        logical_h = np.asarray(logical)
         self._base_host[idx] = base_h
         self._alive_host[idx] = True
         promoted = demoted = 0
@@ -444,26 +558,7 @@ class ClockRegistry:
         """
         res = jax.device_get(          # single host transfer for the pytree
             self.engine.classify(local, self._slab()))
-        alive = self._alive_host
-        p_le_q = res.after()           # peer ≼ local
-        q_le_p = res.before()          # local ≼ peer
-        equal = res.equal()
-        status = np.full(self.capacity, FORKED, np.int8)
-        status[p_le_q] = ANCESTOR
-        status[q_le_p] = DESCENDANT
-        status[equal] = SAME
-        status[~alive] = DEAD
-        # fp of the direction actually claimed; SAME and FORKED are exact
-        fp = np.asarray(res.claimed_fp(), np.float32)
-        fp[~alive] = 0.0
-        return FleetView(
-            status=status,
-            fp=fp,
-            sums=res.sum_p,
-            alive=alive.copy(),
-            local_sum=float(res.sum_q),
-            engine=res.engine or "",
-        )
+        return view_from_classify(res, self._alive_host, self.capacity)
 
     def all_pairs(self, **kw):
         """Tiled all-pairs compare -> ``causal.ComparisonMatrix`` (also

@@ -41,7 +41,25 @@ def main():
     ap.add_argument("--trace-dir", type=str, default=None,
                     help="record spans/metrics/audit for this run under "
                          "this directory (see repro.obs)")
+    ap.add_argument("--tiered", action="store_true",
+                    help="hold session clocks in a hot/warm/cold "
+                         "TieredRegistry behind a streaming admission "
+                         "pipeline (repro.serve) instead of the flat "
+                         "engine slab")
+    ap.add_argument("--bench-serve", action="store_true",
+                    help="run the serve churn benchmark (quick config) "
+                         "and exit; heavier runs via "
+                         "benchmarks/bench_serve.py")
     args = ap.parse_args()
+
+    if args.bench_serve:
+        import json
+
+        from repro.serve.churn import ChurnConfig, run_churn
+        report = run_churn(ChurnConfig.quick(seed=args.seed,
+                                             trace_dir=args.trace_dir))
+        print(json.dumps(report.to_dict(), indent=2))
+        raise SystemExit(0 if report.ok() else 1)
 
     obs = None
     policy = CausalPolicy(fp_threshold=1e-4)
@@ -72,6 +90,25 @@ def main():
           f"({args.batch*args.gen/(t2-t1):.1f} tok/s)")
     print(f"[serve] sample outputs: {out[:, :8].tolist()}")
     print(f"[serve] engine clock sum: {float(engine.clock.clock.sum()):.0f}")
+
+    if args.tiered:
+        from repro.serve import AdmissionPipeline, TierConfig, TieredRegistry
+        tiers = TieredRegistry(
+            TierConfig(hot_capacity=max(16, 4 * args.batch)),
+            m=engine.clock.cfg.m, k=engine.clock.cfg.k,
+            policy=dataclasses.replace(engine.clock.policy,
+                                       fp_threshold=1.0))
+        pipe = AdmissionPipeline(tiers, lambda: engine.clock.clock)
+        ticket = pipe.submit(session["sid"],
+                             clock=session["clock"].clock)
+        pipe.drain(timeout=60)
+        v = ticket.result(1)
+        q = pipe.submit(session["sid"], kind="query").result(60)
+        print(f"[serve] tiered admission: {v.verdict} fp={v.fp:.3g} "
+              f"admitted={v.admitted} engine={v.engine}; "
+              f"query={q.verdict}; tiers={tiers.occupancy()}")
+        pipe.close()
+        tiers.close()
 
     if args.peers:
         from repro.launch.peers import parse_peers, transport_from_specs

@@ -1,0 +1,32 @@
+"""Causality-as-a-service: streaming admission over a tiered registry.
+
+- ``tiers``    — hot device slab → warm packed host tier → cold disk
+  frames, access-driven promotion/demotion, one ``classify`` front door
+  bit-identical to a flat slab;
+- ``pipeline`` — bounded-queue continuous-batching admission with a
+  double-buffered device slab and a §4-CRC digest cache, every acted-on
+  verdict audited gossip-style;
+- ``churn``    — seeded million-session arrival/expiry/migration driver
+  with Zipf access skew and a vector-clock ground truth.
+"""
+from repro.serve.churn import ChurnConfig, ChurnReport, run_churn
+from repro.serve.pipeline import (
+    AdmissionPipeline,
+    AdmissionTicket,
+    AdmissionVerdict,
+    PipelineConfig,
+)
+from repro.serve.tiers import TierConfig, TieredRegistry, TieredView
+
+__all__ = [
+    "TierConfig",
+    "TieredRegistry",
+    "TieredView",
+    "PipelineConfig",
+    "AdmissionPipeline",
+    "AdmissionTicket",
+    "AdmissionVerdict",
+    "ChurnConfig",
+    "ChurnReport",
+    "run_churn",
+]

@@ -1,0 +1,487 @@
+"""Streaming admission pipeline: continuous-batching causality-as-a-service.
+
+The serving engine's ``adopt_many`` classifies request-sized batches
+synchronously: stack cells, classify, block, merge, repeat — the device
+idles while the host stacks and the host idles while the device
+classifies.  This pipeline runs admission as a stream (the offline-
+inference loop shape: threaded feeders, device-resident state, overlap
+of transfer and compute):
+
+  - any number of host feeder threads ``submit()`` clock updates and
+    queries into one bounded queue and get a ticket to wait on;
+  - one worker drains the queue into batches and keeps TWO batches in
+    flight: while the device classifies batch *t*, the worker stages
+    batch *t+1* host-side (frame decode, digest-cache probe, packed
+    slab assembly) — JAX's async dispatch provides the overlap, the
+    loop just never blocks on results before staging the next batch;
+  - a digest cache keyed on the §4 wire-cell CRC (``core.wire``) skips
+    re-classifying sessions whose cells — and the local clock — are
+    unchanged since their last verdict; hit/miss counters flow through
+    ``repro.obs``.  Invalidation rule: an entry is valid only while the
+    LOCAL clock's CRC still matches the one stored with it, so any
+    local merge/tick implicitly flushes the cache (fp depends on both
+    sums, so a stale local clock would report stale confidence).
+
+Verdicts are computed by the same ``CausalEngine`` call, over the same
+packed layout, with the same pinned kernel blocks as the tiered
+registry (``serve.tiers``) — and every acted-on admission verdict is
+audited exactly like gossip verdicts (CRC pair, claimed-direction
+Eq. 3 fp, threshold, engine, wire frames), so ``AuditTrail.replay`` /
+``replay_frames`` re-derive a serve run bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from array import array
+from collections import OrderedDict
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clock as bc
+from repro.core import wire
+from repro.causal import PackedSlab
+from repro.fleet.registry import STATUS_NAMES, _near_wrap
+from repro.serve.tiers import TieredRegistry, _fold_i32
+
+__all__ = ["PipelineConfig", "AdmissionVerdict", "AdmissionTicket",
+           "AdmissionPipeline"]
+
+#: admission-latency histogram bin edges (milliseconds)
+LATENCY_MS_EDGES = (0.5, 1, 2, 5, 10, 20, 50, 100, 250, 1000)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    batch_size: int = 256         # sessions classified per device call
+    queue_depth: int = 2048       # bounded feeder queue (backpressure)
+    max_wait_s: float = 0.005     # batch fill window before dispatch
+    digest_cache: bool = True
+    cache_capacity: int = 65536   # LRU digest-cache entries
+
+
+@dataclasses.dataclass
+class AdmissionVerdict:
+    """What one request resolved to."""
+
+    sid: str
+    kind: str                 # "admit" | "query"
+    verdict: str              # STATUS_NAMES string ("unknown" if absent)
+    fp: float                 # claimed-direction Eq. 3 fp
+    admitted: bool            # admit requests: did it pass the gate
+    cached: bool              # served from the digest cache
+    engine: str
+    latency_s: float
+
+
+class AdmissionTicket:
+    """Feeder-side handle: ``result()`` blocks until the verdict lands."""
+
+    __slots__ = ("_event", "_verdict")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._verdict: Optional[AdmissionVerdict] = None
+
+    def _resolve(self, verdict: AdmissionVerdict) -> None:
+        self._verdict = verdict
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> AdmissionVerdict:
+        if not self._event.wait(timeout):
+            raise TimeoutError("admission verdict not ready")
+        return self._verdict
+
+
+@dataclasses.dataclass
+class _Request:
+    kind: str
+    sid: str
+    frame: Optional[bytes]    # encoded clock (admits)
+    t_submit: float
+    ticket: AdmissionTicket
+
+
+@dataclasses.dataclass
+class _Staged:
+    """One in-flight batch: async device work + host-side leftovers."""
+
+    reqs: list                # cache-miss requests, row-aligned
+    rows: list                # decoded (cells_np, base) per request
+    res: object               # async ClassifyResult (not yet device_get)
+    hits: list                # (request, cached-entry, row) cache hits
+    unknown: list             # query requests for absent sids
+    local: bc.BloomClock
+    local_crc: int
+    local_sum: float
+
+
+class AdmissionPipeline:
+    """Bounded-queue streaming admission over a ``TieredRegistry``.
+
+    ``local_source`` is a zero-arg callable returning the CURRENT local
+    (replica) clock — it is read once per staged batch, so feeders may
+    tick it between batches (each batch's verdicts are consistent with
+    one local snapshot, and the audit frames pin which one).
+    """
+
+    def __init__(self, tiers: TieredRegistry,
+                 local_source, cfg: PipelineConfig = PipelineConfig()):
+        self.tiers = tiers
+        self.cfg = cfg
+        self.local_source = local_source
+        self.engine = tiers.engine          # pinned blocks ride the policy
+        self.policy = tiers.policy
+        self.obs = tiers.obs
+        self.threshold = float(self.policy.fp_threshold)
+        self._queue: queue.Queue = queue.Queue(maxsize=cfg.queue_depth)
+        self._cache: OrderedDict = OrderedDict()  # peer_crc -> entry
+        self._local_frames: dict[int, bytes] = {}
+        self._pending = 0
+        self._pending_lock = threading.Condition()
+        self._closed = False
+        self._error: Optional[BaseException] = None
+        self.latencies = array("d")         # per-request submit->verdict s
+        self.n_admitted = 0
+        self.n_rejected = 0
+        self.n_queries = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.batches = 0
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="admission-pipeline")
+        self._worker.start()
+
+    # ---- feeder side ----
+    def submit(self, sid: str, clock: bc.BloomClock | None = None,
+               frame: bytes | None = None,
+               kind: str = "admit") -> AdmissionTicket:
+        """Enqueue one request (thread-safe; blocks when the queue is
+        full — bounded-queue backpressure).  ``admit`` needs a clock or
+        an encoded wire frame; ``query`` classifies the session's
+        STORED clock against the local one."""
+        if self._closed:
+            raise RuntimeError("pipeline is closed")
+        if kind == "admit" and frame is None:
+            if clock is None:
+                raise ValueError("admit needs a clock or a frame")
+            frame = wire.encode_clock(bc.to_wire(clock))
+        ticket = AdmissionTicket()
+        with self._pending_lock:
+            self._pending += 1
+        self._queue.put(_Request(kind=kind, sid=str(sid), frame=frame,
+                                 t_submit=time.perf_counter(),
+                                 ticket=ticket))
+        return ticket
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted request has resolved."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._pending_lock:
+            while self._pending > 0:
+                if self._error is not None:
+                    raise RuntimeError(
+                        "admission worker died") from self._error
+                remaining = (None if deadline is None
+                             else max(0.0, deadline - time.monotonic()))
+                if not self._pending_lock.wait(timeout=remaining):
+                    raise TimeoutError(
+                        f"{self._pending} requests still in flight")
+            if self._error is not None:
+                raise RuntimeError(
+                    "admission worker died") from self._error
+
+    def close(self) -> None:
+        """Drain and stop the worker (idempotent)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._worker.join(timeout=60.0)
+
+    # ---- worker side ----
+    def _run(self) -> None:
+        inflight: Optional[_Staged] = None
+        try:
+            while True:
+                reqs = self._collect()
+                staged = self._stage(reqs) if reqs else None
+                if inflight is not None:
+                    # finalize batch t AFTER dispatching t+1: the device
+                    # is already computing t+1 while we device_get t's
+                    # results
+                    self._finalize(inflight)
+                inflight = staged
+                if (inflight is None and self._closed
+                        and self._queue.empty()):
+                    break
+        except BaseException as e:   # surface in drain(), don't hang it
+            self._error = e
+            with self._pending_lock:
+                self._pending_lock.notify_all()
+
+    def _collect(self) -> list:
+        """Up to ``batch_size`` requests, waiting at most ``max_wait_s``
+        past the first one."""
+        try:
+            first = self._queue.get(timeout=0.02)
+        except queue.Empty:
+            return []
+        reqs = [first]
+        deadline = time.perf_counter() + self.cfg.max_wait_s
+        while len(reqs) < self.cfg.batch_size:
+            left = deadline - time.perf_counter()
+            if left <= 0:
+                break
+            try:
+                reqs.append(self._queue.get(timeout=left))
+            except queue.Empty:
+                break
+        return reqs
+
+    def _decode(self, req: _Request):
+        """Host-side row for one request: (cells, base) where cells is
+        u8 (packed fast path) or an int32 logical row (wide overlay)."""
+        if req.frame is not None:
+            snap = wire.decode_clock(req.frame)
+            return np.asarray(snap["cells"]), int(snap["base"])
+        clock = self.tiers.get(req.sid)       # query: stored clock
+        cells = np.asarray(clock.logical_cells(), np.int32)
+        return cells, 0
+
+    def _stage(self, reqs: list) -> _Staged:
+        """Host staging + async device dispatch for one batch."""
+        local = self.local_source()
+        local_np = np.asarray(local.logical_cells(), np.int32)
+        local_crc = wire.cells_crc(local_np)
+        local_sum = float(np.asarray(bc.clock_sum(local)))
+        hits, misses, rows, unknown = [], [], [], []
+        for req in reqs:
+            if req.kind == "query" and req.sid not in self.tiers:
+                unknown.append(req)
+                continue
+            cells, base = self._decode(req)
+            entry = None
+            if self.cfg.digest_cache and req.kind == "admit":
+                peer_crc = wire.cells_crc(cells, base)
+                entry = self._cache_probe(peer_crc, local_crc)
+            if entry is not None:
+                hits.append((req, entry, (cells, base)))
+            else:
+                misses.append(req)
+                rows.append((cells, base))
+        res = None
+        if misses:
+            m = self.tiers.m
+            # pad ragged tails to batch_size: one compiled kernel shape
+            # for the whole stream (pad rows are all-zero u8 — their
+            # verdicts are computed and ignored)
+            n = max(len(misses), self.cfg.batch_size)
+            u8 = np.zeros((n, m), np.uint8)
+            base_v = np.zeros(n, np.int64)
+            wide: dict[int, np.ndarray] = {}
+            for i, (cells, base) in enumerate(rows):
+                if (cells.dtype == np.uint8
+                        and not _near_wrap(np.asarray([base]))[0]):
+                    u8[i] = cells
+                    base_v[i] = base
+                    continue
+                # int32 frame: min-lift into the u8+base layout when the
+                # span allows (same split rule as kernels/pack) — the
+                # exact-int32 overlay is for genuine rim rows only, its
+                # kernel shape varies with the overlay count
+                logical = cells.astype(np.int64) + base
+                mn = int(logical.min())
+                if (0 <= mn and int(logical.max()) - mn <= 255
+                        and not _near_wrap(np.asarray([mn]))[0]):
+                    u8[i] = (logical - mn).astype(np.uint8)
+                    base_v[i] = mn
+                else:
+                    wide[i] = _fold_i32(logical)
+            slab = PackedSlab(jnp.asarray(u8),
+                              jnp.asarray(_fold_i32(base_v)),
+                              base_host=base_v, wide=wide)
+            # async: no device_get here — _finalize blocks on it while
+            # the NEXT batch stages
+            res = self.engine.classify(local, slab)
+        return _Staged(reqs=misses, rows=rows, res=res, hits=hits,
+                       unknown=unknown, local=local, local_crc=local_crc,
+                       local_sum=local_sum)
+
+    def _cache_probe(self, peer_crc: int, local_crc: int):
+        entry = self._cache.get(peer_crc)
+        if entry is None or entry["local_crc"] != local_crc:
+            return None
+        self._cache.move_to_end(peer_crc)
+        return entry
+
+    def _cache_store(self, peer_crc: int, local_crc: int, verdict: str,
+                     fp: float, admitted: bool, engine: str) -> None:
+        self._cache[peer_crc] = {
+            "local_crc": local_crc, "verdict": verdict, "fp": fp,
+            "admitted": admitted, "engine": engine, "peer_crc": peer_crc}
+        self._cache.move_to_end(peer_crc)
+        while len(self._cache) > self.cfg.cache_capacity:
+            self._cache.popitem(last=False)
+
+    def _finalize(self, staged: _Staged) -> None:
+        """Block on batch t's device results, apply + audit + resolve."""
+        obs = self.obs
+        now = time.perf_counter
+        to_admit: dict = {}
+        resolved: list = []   # tickets resolve only AFTER tiers apply,
+        # so drain() implies every admitted clock is queryable
+        if staged.res is not None:
+            res = jax.device_get(staged.res)
+            after = np.asarray(res.after(), bool)
+            equal = np.asarray(res.equal(), bool)
+            before = np.asarray(res.before(), bool)
+            claimed = np.asarray(res.claimed_fp(), np.float32)
+            gate_fp = np.asarray(res.fp_after(), np.float32)
+            engine = res.engine or ""
+            for i, req in enumerate(staged.reqs):
+                verdict = ("same" if equal[i]
+                           else "ancestor" if after[i]
+                           else "descendant" if before[i]
+                           else "forked")
+                fp = float(claimed[i])
+                if req.kind == "admit":
+                    ok = bool(after[i]) and float(gate_fp[i]) <= self.threshold
+                    peer_crc = wire.cells_crc(*staged.rows[i])
+                    if self.cfg.digest_cache:
+                        self._cache_store(peer_crc, staged.local_crc,
+                                          verdict, fp, ok, engine)
+                    if ok:
+                        snap = wire.decode_clock(req.frame)
+                        to_admit[req.sid] = bc.from_wire(snap)
+                    self._audit(req, staged, verdict, fp, ok, engine,
+                                peer_crc)
+                    self._count_admit(ok)
+                else:
+                    self.n_queries += 1
+                resolved.append((req, verdict, fp,
+                                 req.sid in to_admit, False, engine))
+        for req, entry, (cells, base) in staged.hits:
+            verdict, fp = entry["verdict"], entry["fp"]
+            ok = entry["admitted"]
+            if ok:
+                snap = wire.decode_clock(req.frame)
+                to_admit[req.sid] = bc.from_wire(snap)
+            self._audit(req, staged, verdict, fp, ok,
+                        "digest_cache", entry["peer_crc"])
+            self._count_admit(ok, cached=True)
+            resolved.append((req, verdict, fp, ok, True, "digest_cache"))
+        for req in staged.unknown:
+            self.n_queries += 1
+            resolved.append((req, "unknown", 0.0, False, False, ""))
+        if to_admit:
+            self.tiers.admit_many(to_admit)
+        for req, verdict, fp, ok, cached, engine in resolved:
+            self._resolve(req, verdict, fp, admitted=ok, cached=cached,
+                          engine=engine, now=now())
+        self.batches += 1
+        if obs:
+            obs.metrics.gauge("pipeline_queue_depth").set(
+                self._queue.qsize())
+
+    def _count_admit(self, ok: bool, cached: bool = False) -> None:
+        if ok:
+            self.n_admitted += 1
+        else:
+            self.n_rejected += 1
+        if cached:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+        if self.obs:
+            self.obs.metrics.counter(
+                "pipeline_admissions",
+                outcome="adopted" if ok else "rejected").inc()
+            self.obs.metrics.counter(
+                "digest_cache",
+                outcome="hit" if cached else "miss").inc()
+
+    def _resolve(self, req: _Request, verdict: str, fp: float, *,
+                 admitted: bool, cached: bool, engine: str,
+                 now: float) -> None:
+        latency = now - req.t_submit
+        self.latencies.append(latency)
+        if self.obs:
+            self.obs.metrics.histogram(
+                "admission_latency_ms",
+                edges=LATENCY_MS_EDGES).observe(latency * 1e3)
+        req.ticket._resolve(AdmissionVerdict(
+            sid=req.sid, kind=req.kind, verdict=verdict, fp=fp,
+            admitted=admitted, cached=cached, engine=engine,
+            latency_s=latency))
+        with self._pending_lock:
+            self._pending -= 1
+            if self._pending == 0:
+                self._pending_lock.notify_all()
+
+    def _audit(self, req: _Request, staged: _Staged, verdict: str,
+               fp: float, ok: bool, engine: str, peer_crc: int) -> None:
+        """Audit one acted-on admission verdict, gossip-shaped: replay
+        and replay_frames re-derive it bit-for-bit."""
+        audit = self.obs.audit
+        if not audit:
+            return
+        frames = {}
+        if audit.store_frames:
+            lf = self._local_frames.get(staged.local_crc)
+            if lf is None:
+                lf = wire.encode_clock(bc.to_wire(staged.local))
+                self._local_frames[staged.local_crc] = lf
+                if len(self._local_frames) > 64:
+                    self._local_frames.pop(next(iter(self._local_frames)))
+            frames = {"local_frame": lf, "peer_frame": req.frame}
+        snap = wire.decode_clock(req.frame)
+        peer_sum = float(
+            np.asarray(snap["cells"], np.float64).sum()
+            + float(snap["base"]) * self.tiers.m)
+        audit.record(
+            "verdict", req.sid,
+            verdict=verdict,
+            action="adopt" if ok else "reject",
+            fp=fp,
+            threshold=self.threshold,
+            engine=engine,
+            local_crc=staged.local_crc,
+            peer_crc=peer_crc,
+            local_sum=staged.local_sum,
+            peer_sum=peer_sum,
+            transport="serve_pipeline",
+            **frames)
+
+    # ---- introspection ----
+    def latency_quantiles(self) -> dict:
+        """p50/p95/p99 submit->verdict latency (seconds)."""
+        if not self.latencies:
+            return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+        lat = np.asarray(self.latencies)
+        return {
+            "p50": float(np.quantile(lat, 0.50)),
+            "p95": float(np.quantile(lat, 0.95)),
+            "p99": float(np.quantile(lat, 0.99)),
+        }
+
+    def stats(self) -> dict:
+        q = self.latency_quantiles()
+        return {
+            "admitted": self.n_admitted,
+            "rejected": self.n_rejected,
+            "queries": self.n_queries,
+            "batches": self.batches,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "p50_ms": q["p50"] * 1e3,
+            "p95_ms": q["p95"] * 1e3,
+            "p99_ms": q["p99"] * 1e3,
+        }

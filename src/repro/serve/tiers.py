@@ -1,0 +1,491 @@
+"""Tiered session-clock registry: hot device slab → warm host tier → cold disk.
+
+One flat ``ClockRegistry`` slab caps the session population at whatever
+fits a device.  Serving-scale populations are heavy-tailed (a small hot
+working set over a long cold tail — the Tree Clocks hierarchy cue), so
+the store is split by access frequency:
+
+  hot   a device ``ClockRegistry`` slab — every hot session classifies
+        in the one fused one-vs-many kernel call;
+  warm  the same §4 packed layout (u8 residuals + i32 base, see
+        ``kernels.pack``) in host numpy arrays — no device residency,
+        promoted int32 rows ride a side dict exactly like the slab's;
+  cold  §4 wire frames (``core.wire.encode_clock``) in one append-only
+        spill file with a host offset index — bounded only by disk.
+
+Movement is access-count driven: ``touch``/``get``/``classify`` bump a
+session's count; crossing ``promote_after`` promotes it one tier toward
+the device.  Demotion happens under pressure: a full hot slab evicts
+its least-touched rows (captured losslessly via the registry's
+``on_evict`` hook — the §4 packed row moves, never a re-encode) into
+warm, and a full warm tier spills its least-touched rows to disk.
+
+``classify(query)`` is the one front door.  Each tier is classified
+through the same ``CausalEngine`` the flat slab uses, over the same
+packed layout, with the SAME kernel block shapes — resolved ONCE at the
+flat-equivalent capacity and pinned for every tier call, because the
+in-kernel f32 sum accumulation order (and therefore the Eq. 3 fp bits)
+depends on the m-axis block.  The result is bit-identical per session
+to one flat oversized ``ClockRegistry`` holding the whole population —
+``tests/test_serve_tiers.py`` pins it, promoted int32-rim rows and all.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.causal import CausalEngine, CausalPolicy, PackedSlab
+from repro.core import clock as bc
+from repro.core import wire
+from repro.fleet.registry import (ClockRegistry, EvictedRow, FleetView,
+                                  STATUS_NAMES, _near_wrap,
+                                  view_from_classify)
+from repro.kernels import ops
+from repro.obs.observer import resolve
+
+__all__ = ["TierConfig", "TieredRegistry", "TieredView"]
+
+TIERS = ("hot", "warm", "cold")
+
+
+@dataclasses.dataclass(frozen=True)
+class TierConfig:
+    """Capacity and movement policy of a ``TieredRegistry``."""
+
+    hot_capacity: int = 256       # device ClockRegistry slab rows
+    warm_capacity: int = 4096     # host packed rows
+    promote_after: int = 3        # accesses that pull a row one tier up
+    demote_batch: int = 32        # hot rows demoted per overflow
+    spill_batch: int = 256        # warm rows spilled per overflow
+    cold_batch: int = 16384       # cold rows decoded per classify chunk
+    spill_dir: Optional[str] = None   # cold file location (tmp when None)
+
+
+@dataclasses.dataclass
+class TieredView:
+    """Per-session classification across every tier (host-side).
+
+    Row order follows ``sids``; values are bit-identical to what one
+    flat ``ClockRegistry.classify_all`` over the same population
+    reports for each session (same status semantics, same claimed-
+    direction Eq. 3 fp bits).
+    """
+
+    sids: list
+    status: np.ndarray        # int8 status code per session
+    fp: np.ndarray            # float32 claimed-direction Eq. 3 fp
+    sums: np.ndarray          # float32 cached clock sums
+    tier: list                # "hot" | "warm" | "cold" per session
+    local_sum: float
+    engine: str = ""
+
+    def verdict_of(self, sid) -> str:
+        return STATUS_NAMES[int(self.status[self.sids.index(sid)])]
+
+    def fp_of(self, sid) -> float:
+        return float(self.fp[self.sids.index(sid)])
+
+    def counts(self) -> dict:
+        return {name: int(np.sum(self.status == code))
+                for code, name in STATUS_NAMES.items()}
+
+    def tier_counts(self) -> dict:
+        return {t: self.tier.count(t) for t in TIERS}
+
+
+def _fold_i32(cells: np.ndarray) -> np.ndarray:
+    """Fold int64 logical values onto the int32 mod-2^32 circle."""
+    return (np.asarray(cells, np.int64)
+            & 0xFFFFFFFF).astype(np.uint32).view(np.int32)
+
+
+class TieredRegistry:
+    """Hot/warm/cold session-clock store behind one classify front door."""
+
+    def __init__(self, cfg: TierConfig = TierConfig(), *, m: int = 64,
+                 k: int = 4, policy: CausalPolicy | None = None):
+        self.cfg = cfg
+        self.m = m
+        self.k = k
+        base_pol = policy if policy is not None else CausalPolicy()
+        if base_pol.mesh is not None:
+            # the tier split is a host-level construct; scale-out across
+            # devices stays the flat slab's job (ROADMAP carries it)
+            base_pol = dataclasses.replace(base_pol, mesh=None)
+        # Pin the one-vs-many kernel block shapes ONCE, resolved at the
+        # flat-equivalent capacity: Eq. 3 fp bits depend on the m-axis
+        # block (f32 accumulation order), and the autotune table is
+        # keyed by slab N — per-tier resolution could tile m differently
+        # per tier and break the flat-slab bit-identity contract.
+        interpret = (base_pol.interpret if base_pol.interpret is not None
+                     else not ops._on_tpu())
+        bn, bm = ops._one_vs_many_blocks(
+            cfg.hot_capacity + cfg.warm_capacity, m, base_pol.bn,
+            base_pol.bm, interpret, base_pol.autotune)
+        self.policy = dataclasses.replace(base_pol, bn=bn, bm=bm)
+        self.blocks = (bn, bm)
+        self.hot = ClockRegistry(capacity=cfg.hot_capacity, m=m, k=k,
+                                 policy=self.policy)
+        self.hot.on_evict = self._ingest_warm
+        self.engine: CausalEngine = self.hot.engine
+        self.obs = resolve(getattr(self.policy, "observer", None))
+        # warm tier: the slab layout, host-side
+        W = cfg.warm_capacity
+        self._w_u8 = np.zeros((W, m), np.uint8)
+        self._w_base = np.zeros(W, np.int64)
+        self._w_sums = np.zeros(W, np.float32)
+        self._w_alive = np.zeros(W, bool)
+        self._w_wide: dict[int, np.ndarray] = {}
+        self._w_slot_of: dict = {}
+        self._w_free: list[int] = list(range(W - 1, -1, -1))
+        # cold tier: append-only frame spill + offset index
+        self._spill_dir = cfg.spill_dir or tempfile.mkdtemp(
+            prefix="bloomclock_cold_")
+        os.makedirs(self._spill_dir, exist_ok=True)
+        self._spill_path = os.path.join(self._spill_dir, "cold.bin")
+        self._spill_file = None
+        self._cold_index: dict = {}       # sid -> (offset, nbytes)
+        # movement bookkeeping
+        self._tier_of: dict = {}
+        self._access: dict = {}
+        self._age: dict = {}
+        self._age_seq = 0
+        self.promotions = 0
+        self.demotions = 0
+        self.spills = 0
+
+    # ---- membership ----
+    def __len__(self) -> int:
+        return len(self._tier_of)
+
+    def __contains__(self, sid) -> bool:
+        return sid in self._tier_of
+
+    def tier_of(self, sid) -> str:
+        return self._tier_of[sid]
+
+    def sids(self) -> list:
+        return list(self._tier_of)
+
+    def occupancy(self) -> dict:
+        return {
+            "hot": len(self.hot),
+            "warm": len(self._w_slot_of),
+            "cold": len(self._cold_index),
+        }
+
+    def _note_occupancy(self) -> None:
+        if self.obs:
+            for tier, n in self.occupancy().items():
+                self.obs.metrics.gauge("tier_occupancy", tier=tier).set(n)
+
+    # ---- admission ----
+    def admit(self, sid, clock: bc.BloomClock) -> None:
+        self.admit_many({sid: clock})
+
+    def admit_many(self, clocks: dict) -> None:
+        """Admit (or overwrite) sessions into the HOT tier; one scatter
+        for the batch.  A full hot slab demotes its least-touched rows
+        into warm first (which may cascade a warm spill to cold)."""
+        if not clocks:
+            return
+        items = list(clocks.items())
+        # a batch larger than the hot slab lands in capacity-sized
+        # waves; earlier waves demote into warm as later ones arrive
+        step = max(1, self.hot.capacity // 2)
+        for at in range(0, len(items), step):
+            batch = dict(items[at:at + step])
+            for sid in batch:   # re-admission supersedes the old copy
+                if self._tier_of.get(sid) in ("warm", "cold"):
+                    self._drop_from_tier(sid)
+            fresh = [sid for sid in batch if sid not in self.hot]
+            # never demote a row this wave is about to overwrite: the
+            # re-admit would then need a slot the eviction just promised
+            # to someone else
+            self._ensure_hot_room(len(fresh), exclude=batch.keys())
+            self.hot.admit_many(batch)
+            for sid in batch:
+                self._tier_of[sid] = "hot"
+                self._access.setdefault(sid, 0)
+                self._age[sid] = self._age_seq
+                self._age_seq += 1
+        self._note_occupancy()
+
+    def release(self, sid) -> None:
+        """Forget a session entirely (expiry)."""
+        tier = self._tier_of.get(sid)
+        if tier is None:
+            return
+        if tier == "hot":
+            # a released row is gone, not demoted
+            hook, self.hot.on_evict = self.hot.on_evict, None
+            try:
+                self.hot.evict(sid)
+            finally:
+                self.hot.on_evict = hook
+        else:
+            self._drop_from_tier(sid)
+        del self._tier_of[sid]
+        self._access.pop(sid, None)
+        self._age.pop(sid, None)
+        self._note_occupancy()
+
+    # ---- access-driven movement ----
+    def touch(self, sid) -> None:
+        """Count one access; crossing ``promote_after`` promotes the
+        session one tier toward the device."""
+        self._access[sid] = self._access.get(sid, 0) + 1
+        if (self._tier_of.get(sid) in ("warm", "cold")
+                and self._access[sid] >= self.cfg.promote_after):
+            self.promote(sid)
+
+    def promote(self, sid) -> None:
+        """Pull a warm/cold session into the hot slab (exact row move:
+        the stored clock re-admits bit-identically)."""
+        tier = self._tier_of.get(sid)
+        if tier not in ("warm", "cold"):
+            return
+        clock = self.get(sid, count=False)
+        self._drop_from_tier(sid)
+        self._tier_of.pop(sid, None)
+        self.admit_many({sid: clock})
+        self._access[sid] = 0          # fresh residency, fresh count
+        self.promotions += 1
+        if self.obs:
+            self.obs.metrics.counter("tier_promotions",
+                                     src=tier).inc()
+
+    def _victims(self, sids, count: int) -> list:
+        """Least-touched first, oldest residency breaking ties."""
+        ranked = sorted(sids, key=lambda s: (self._access.get(s, 0),
+                                             self._age.get(s, 0)))
+        return ranked[:count]
+
+    def _ensure_hot_room(self, need: int, exclude=()) -> None:
+        free = self.hot.capacity - len(self.hot)
+        if free >= need:
+            return
+        short = need - free
+        exclude = set(exclude)
+        candidates = [s for s in self.hot.peer_ids() if s not in exclude]
+        # round the wave up to a demote_batch multiple: evictions then
+        # reuse a handful of compiled gather/scatter shapes instead of
+        # recompiling per ad-hoc size
+        db = self.cfg.demote_batch
+        count = -(-max(short, db) // db) * db
+        victims = self._victims(candidates, count)
+        self.hot.evict_many(victims)   # on_evict hook lands them in warm
+
+    def _ingest_warm(self, captured: dict) -> None:
+        """``ClockRegistry.on_evict`` hook: demoted hot rows arrive in
+        the packed representation and land in the warm arrays as-is."""
+        self._ensure_warm_room(len(captured))
+        for sid, row in captured.items():
+            slot = self._w_free.pop()
+            self._w_slot_of[sid] = slot
+            self._w_u8[slot] = row.cells_u8
+            self._w_base[slot] = row.base
+            self._w_sums[slot] = row.sum
+            self._w_alive[slot] = True
+            if row.wide is not None:
+                self._w_wide[slot] = row.wide
+            else:
+                self._w_wide.pop(slot, None)
+            self._tier_of[sid] = "warm"
+        self.demotions += len(captured)
+        if self.obs:
+            self.obs.metrics.counter("tier_demotions").inc(len(captured))
+
+    def _ensure_warm_room(self, need: int) -> None:
+        if len(self._w_free) >= need:
+            return
+        short = need - len(self._w_free)
+        sb = self.cfg.spill_batch
+        victims = self._victims(
+            list(self._w_slot_of), -(-max(short, sb) // sb) * sb)
+        self._spill(victims)
+
+    def _spill(self, sids: list) -> None:
+        """Encode warm rows as §4 wire frames and append them to the
+        cold file (promoted rows ship int32; everything else ships
+        u8 + base — the exact bytes ``get`` will decode back)."""
+        f = self._spill_handle()
+        for sid in sids:
+            slot = self._w_slot_of.pop(sid)
+            if slot in self._w_wide:
+                snap = {"cells": self._w_wide.pop(slot),
+                        "base": 0, "k": self.k}
+            else:
+                snap = {"cells": self._w_u8[slot].copy(),
+                        "base": int(self._w_base[slot]), "k": self.k}
+            frame = wire.encode_clock(snap)
+            offset = f.tell()
+            f.write(frame)
+            self._cold_index[sid] = (offset, len(frame))
+            self._w_alive[slot] = False
+            self._w_free.append(slot)
+            self._tier_of[sid] = "cold"
+        f.flush()
+        self.spills += len(sids)
+        if self.obs:
+            self.obs.metrics.counter("tier_spills").inc(len(sids))
+
+    def _spill_handle(self):
+        if self._spill_file is None:
+            self._spill_file = open(self._spill_path, "a+b")
+        self._spill_file.seek(0, os.SEEK_END)
+        return self._spill_file
+
+    def _read_frame(self, sid) -> bytes:
+        offset, nbytes = self._cold_index[sid]
+        f = self._spill_handle()
+        f.seek(offset)
+        return f.read(nbytes)
+
+    def _drop_from_tier(self, sid) -> None:
+        """Remove a session's warm/cold storage (tier map untouched)."""
+        tier = self._tier_of.get(sid)
+        if tier == "warm":
+            slot = self._w_slot_of.pop(sid)
+            self._w_alive[slot] = False
+            self._w_wide.pop(slot, None)
+            self._w_free.append(slot)
+        elif tier == "cold":
+            # the frame bytes stay orphaned in the append-only file;
+            # compaction is an operator job (rewrite to a fresh file)
+            self._cold_index.pop(sid, None)
+
+    # ---- retrieval ----
+    def get(self, sid, count: bool = True) -> bc.BloomClock:
+        """The session's clock from whichever tier holds it (cold rows
+        decode their frame).  Counts as an access unless ``count=False``
+        — repeated gets promote a tail session toward the device."""
+        tier = self._tier_of[sid]
+        if count:
+            self.touch(sid)
+            tier = self._tier_of[sid]   # touch may have promoted it
+        if tier == "hot":
+            return self.hot.get(sid)
+        if tier == "warm":
+            slot = self._w_slot_of[sid]
+            if slot in self._w_wide:
+                return bc.BloomClock(cells=jnp.asarray(self._w_wide[slot]),
+                                     base=jnp.zeros((), jnp.int32),
+                                     k=self.k)
+            return bc.BloomClock(
+                cells=jnp.asarray(self._w_u8[slot], jnp.int32),
+                base=jnp.asarray(_fold_i32([self._w_base[slot]])[0],
+                                 jnp.int32),
+                k=self.k)
+        return bc.from_wire(wire.decode_clock(self._read_frame(sid)))
+
+    # ---- the classify front door ----
+    def classify(self, query: bc.BloomClock,
+                 sids: Optional[list] = None) -> TieredView:
+        """Classify the query against every stored session (or the given
+        subset), composing per-tier ``CausalEngine`` calls — same packed
+        layout, same pinned kernel blocks — into one view that is
+        bit-identical per session to a flat oversized slab."""
+        want = self.sids() if sids is None else list(sids)
+        by_tier = {"hot": [], "warm": [], "cold": []}
+        for sid in want:
+            by_tier[self._tier_of[sid]].append(sid)
+        status = np.zeros(len(want), np.int8)
+        fp = np.zeros(len(want), np.float32)
+        sums = np.zeros(len(want), np.float32)
+        pos = {sid: i for i, sid in enumerate(want)}
+        engines = []
+        local_sum = float(np.asarray(bc.clock_sum(query)))
+        with self.obs.trace.span("tiers.classify", n=len(want)) as span:
+            if by_tier["hot"]:
+                view = self.hot.classify_all(query)
+                engines.append(f"hot:{view.engine}")
+                for sid in by_tier["hot"]:
+                    slot = self.hot.slot_of(sid)
+                    i = pos[sid]
+                    status[i] = view.status[slot]
+                    fp[i] = view.fp[slot]
+                    sums[i] = view.sums[slot]
+            if by_tier["warm"]:
+                view = self._classify_warm(query)
+                engines.append(f"warm:{view.engine}")
+                for sid in by_tier["warm"]:
+                    slot = self._w_slot_of[sid]
+                    i = pos[sid]
+                    status[i] = view.status[slot]
+                    fp[i] = view.fp[slot]
+                    sums[i] = view.sums[slot]
+            if by_tier["cold"]:
+                eng = self._classify_cold(query, by_tier["cold"], pos,
+                                          status, fp, sums)
+                engines.append(f"cold:{eng}")
+            span.set(engine=" ".join(engines))
+        tiers = [self._tier_of[s] for s in want]
+        if sids is not None:
+            # a targeted query is an access (promotion pressure); a
+            # full-population sweep (dashboards, replay) is not
+            for sid in want:
+                self.touch(sid)
+        self._note_occupancy()
+        return TieredView(
+            sids=want, status=status, fp=fp, sums=sums, tier=tiers,
+            local_sum=local_sum, engine=" ".join(engines))
+
+    def _classify_warm(self, query: bc.BloomClock) -> FleetView:
+        slab = PackedSlab(
+            jnp.asarray(self._w_u8),
+            jnp.asarray(_fold_i32(self._w_base)),
+            base_host=self._w_base, wide=self._w_wide)
+        res = jax.device_get(self.engine.classify(
+            query, slab, bn=self.blocks[0], bm=self.blocks[1]))
+        return view_from_classify(res, self._w_alive, self.cfg.warm_capacity)
+
+    def _classify_cold(self, query, sids, pos, status, fp, sums) -> str:
+        """Chunked classify over decoded cold frames: each chunk builds
+        a transient packed slab (near-wrap / i32 frames ride the wide
+        overlay, same as everywhere else) and runs the same engine call
+        with the same pinned blocks."""
+        B = self.cfg.cold_batch
+        engine = ""
+        for at in range(0, len(sids), B):
+            chunk = sids[at:at + B]
+            # ragged tails pad to the full chunk shape (zero rows are
+            # ignored below) so every chunk reuses one compiled kernel
+            u8 = np.zeros((B, self.m), np.uint8)
+            base = np.zeros(B, np.int64)
+            wide: dict[int, np.ndarray] = {}
+            for i, sid in enumerate(chunk):
+                snap = wire.decode_clock(self._read_frame(sid))
+                cells = np.asarray(snap["cells"])
+                if (cells.dtype == np.uint8
+                        and not _near_wrap(np.asarray([snap["base"]]))[0]):
+                    u8[i] = cells
+                    base[i] = snap["base"]
+                else:
+                    wide[i] = _fold_i32(
+                        cells.astype(np.int64) + int(snap["base"]))
+            slab = PackedSlab(jnp.asarray(u8), jnp.asarray(_fold_i32(base)),
+                              base_host=base, wide=wide)
+            res = jax.device_get(self.engine.classify(
+                query, slab, bn=self.blocks[0], bm=self.blocks[1]))
+            alive = np.zeros(B, bool)
+            alive[:len(chunk)] = True
+            view = view_from_classify(res, alive, B)
+            engine = view.engine
+            for i, sid in enumerate(chunk):
+                j = pos[sid]
+                status[j] = view.status[i]
+                fp[j] = view.fp[i]
+                sums[j] = view.sums[i]
+        return engine
+
+    def close(self) -> None:
+        if self._spill_file is not None:
+            self._spill_file.close()
+            self._spill_file = None

@@ -173,16 +173,11 @@ class ServingEngine:
         return ok, status, fp
 
     def adopt(self, session: dict) -> bool:
-        ok, status, fp = self.can_adopt(session)
-        self._audit_adopt(session.get("sid") or "migrating", session,
-                          status, ok, fp, "merge_compare")
-        if ok:
-            self.clock.clock = bc.merge(self.clock.clock, session["clock"].clock)
-            sid = session.get("sid") or f"migrated/s{self._session_seq}"
-            session["sid"] = sid
-            self._session_seq += 1
-            self._register_session(sid, session["clock"].clock)
-        return ok
+        """Single-session migration: the batched classify path with a
+        batch of one, so the audit record carries the REAL dispatch
+        engine (packed/tri/wide-overlay/...) instead of a fixed label
+        and the merge shares the wrap-safe bulk reduction."""
+        return bool(self.adopt_many([session])[0])
 
     def adopt_many(self, sessions: list) -> np.ndarray:
         """Clock-gated BULK migration: classify every incoming session
@@ -213,11 +208,16 @@ class ServingEngine:
                     bool(ok[i]), float(res.fp_after()[i]),
                     res.engine or "i32")
         if ok.any():
-            merged = jnp.maximum(
-                self.clock.clock.logical_cells(),
-                jnp.max(jnp.where(jnp.asarray(ok)[:, None], cells, 0), axis=0))
+            # wrap-safe bulk merge: fold core.clock.merge's wrap-
+            # subtraction form (local + relu(peer - local), exact on the
+            # mod-2^32 circle) across accepted rows — a raw jnp.maximum
+            # would zero a near-wrap local clock against sane peers
+            local = self.clock.clock.logical_cells().astype(jnp.int32)
+            gain = jnp.where(jnp.asarray(ok)[:, None],
+                             jnp.maximum(cells - local, 0), 0)
             self.clock.clock = bc.compress(bc.BloomClock(
-                cells=merged, base=jnp.zeros((), jnp.int32),
+                cells=local + jnp.max(gain, axis=0),
+                base=jnp.zeros((), jnp.int32),
                 k=self.clock.clock.k))
             for i, s in enumerate(sessions):
                 if ok[i]:

@@ -1,0 +1,204 @@
+"""Streaming admission pipeline: gating, digest cache, audit replay —
+plus the near-INT32_MAX ``adopt_many`` merge regression (a raw
+``jnp.maximum`` merge zeroes a wrapped local clock against sane peers;
+the wrap-safe ``core.clock.merge`` fold must not).
+"""
+import dataclasses
+import types
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.causal.policy import CausalPolicy
+from repro.core import clock as bc
+from repro.core import wire
+from repro.fleet.registry import INT32_MAX
+from repro.obs import AuditTrail, Observer
+from repro.serve.pipeline import AdmissionPipeline, PipelineConfig
+from repro.serve.tiers import TierConfig, TieredRegistry
+
+M, K = 32, 3
+
+CFG = TierConfig(hot_capacity=16, warm_capacity=32, promote_after=2,
+                 demote_batch=4, spill_batch=8, cold_batch=8)
+
+
+def _tick_n(c, n, salt=0):
+    for i in range(n):
+        c = bc.tick(c, jnp.uint32(salt), jnp.uint32(i + 1))
+    return c
+
+
+def _mk(observer=None, threshold=1.0, batch=8):
+    pol = CausalPolicy(fp_threshold=threshold, observer=observer)
+    tiers = TieredRegistry(CFG, m=M, k=K, policy=pol)
+    local = {"clock": _tick_n(bc.zeros(M, K), 12)}
+    pipe = AdmissionPipeline(
+        tiers, lambda: local["clock"],
+        PipelineConfig(batch_size=batch, max_wait_s=0.002))
+    return tiers, pipe, local
+
+
+def test_admit_gate_and_query_roundtrip():
+    tiers, pipe, local = _mk()
+    try:
+        past = _tick_n(bc.zeros(M, K), 4)           # prefix of local
+        # same private event 40x: its cells exceed anything local ever
+        # counted, so no Bloom collision can make it look like a prefix
+        forked = bc.zeros(M, K)
+        for _ in range(40):
+            forked = bc.tick(forked, jnp.uint32(999), jnp.uint32(7))
+        t_ok = pipe.submit("anc", clock=past)
+        t_no = pipe.submit("fork", clock=forked)
+        pipe.drain(timeout=60)
+        v_ok, v_no = t_ok.result(1), t_no.result(1)
+        assert v_ok.admitted and v_ok.verdict == "ancestor"
+        assert v_ok.engine and v_ok.engine != "digest_cache"
+        assert not v_no.admitted and v_no.verdict == "forked"
+        # admitted sessions are queryable after drain(); rejects are not
+        assert "anc" in tiers and "fork" not in tiers
+        q = pipe.submit("anc", kind="query")
+        qq = pipe.submit("ghost", kind="query")
+        pipe.drain(timeout=60)
+        assert q.result(1).verdict == "ancestor"
+        assert qq.result(1).verdict == "unknown"
+        assert pipe.n_admitted == 1 and pipe.n_rejected == 1
+        assert pipe.n_queries == 2
+        assert pipe.latency_quantiles()["p50"] > 0
+    finally:
+        pipe.close()
+        tiers.close()
+
+
+def test_digest_cache_hits_and_invalidation():
+    tiers, pipe, local = _mk()
+    try:
+        frame = wire.encode_clock(bc.to_wire(_tick_n(bc.zeros(M, K), 3)))
+        pipe.submit("a0", frame=frame)
+        pipe.drain(timeout=60)
+        t = [pipe.submit(f"a{i}", frame=frame) for i in range(1, 4)]
+        pipe.drain(timeout=60)
+        assert all(x.result(1).cached for x in t)
+        assert all(x.result(1).engine == "digest_cache" for x in t)
+        assert all(x.result(1).admitted for x in t)
+        assert pipe.cache_hits == 3
+        # a local tick invalidates every entry: same frame misses again
+        local["clock"] = bc.tick(local["clock"], jnp.uint32(1),
+                                 jnp.uint32(77))
+        t2 = pipe.submit("a9", frame=frame)
+        pipe.drain(timeout=60)
+        assert not t2.result(1).cached
+        assert pipe.cache_hits == 3 and pipe.cache_misses >= 2
+    finally:
+        pipe.close()
+        tiers.close()
+
+
+def test_pipeline_audit_replays_bit_identical():
+    trail = AuditTrail(store_frames=True)
+    tiers, pipe, local = _mk(observer=Observer(audit=trail))
+    try:
+        rng = np.random.default_rng(5)
+        for i in range(20):
+            c = _tick_n(bc.zeros(M, K), int(rng.integers(1, 10)),
+                        salt=int(rng.integers(0, 3)))
+            pipe.submit(f"s{i}", clock=c)
+        pipe.drain(timeout=120)
+        for i in range(6):
+            pipe.submit(f"s{i}", kind="query")
+        pipe.drain(timeout=120)
+        n_acted = sum(1 for r in trail.verdicts())
+        assert n_acted >= 20
+        rep = trail.replay_frames(
+            policy=dataclasses.replace(tiers.policy, observer=None))
+        assert rep.checked > 0 and not rep.mismatches, rep.mismatches
+        assert rep.matched == rep.checked
+    finally:
+        pipe.close()
+        tiers.close()
+
+
+def test_queue_backpressure_counts_every_request():
+    tiers, pipe, local = _mk(batch=4)
+    try:
+        past = _tick_n(bc.zeros(M, K), 2)
+        frame = wire.encode_clock(bc.to_wire(past))
+        tickets = [pipe.submit(f"b{i}", frame=frame) for i in range(40)]
+        pipe.drain(timeout=120)
+        assert all(t.result(1).admitted for t in tickets)
+        assert pipe.n_admitted == 40
+        assert pipe.stats()["batches"] >= 1
+    finally:
+        pipe.close()
+        tiers.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: adopt_many near-INT32_MAX merge regression
+# ---------------------------------------------------------------------------
+def test_adopt_many_merge_survives_int32_wrap():
+    """Local replica clock with logical cells past INT32_MAX (negative
+    in the i32 representation).  A sane ancestor peer is accepted; the
+    bulk merge must leave local's mod-2^32 position intact.  The old
+    ``jnp.maximum(peer, local)`` merge collapses every wrapped cell to
+    the peer's small value — billions of events lost."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.models.params import init_params
+    from repro.runtime.clock_runtime import ClockConfig, ClockRuntime
+    from repro.serving.engine import ServeConfig, ServingEngine
+
+    cfg32 = dataclasses.replace(get_smoke_config("qwen1_5_0_5b"),
+                                dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg32)
+    c_cfg = ClockConfig(m=M, fp_threshold=1.0)
+    eng = ServingEngine(params, cfg32, ServeConfig(max_seq=32), c_cfg,
+                        replica_id="rim")
+    wrapped = np.uint64(INT32_MAX) + np.uint64(21)     # 2**31 + 20
+    local_u32 = np.full(M, wrapped, np.uint64)
+    eng.clock.clock = bc.BloomClock(
+        cells=jnp.asarray(local_u32.astype(np.uint32).view(np.int32)),
+        base=jnp.zeros((), jnp.int32), k=c_cfg.k)
+    # peer at 100 events per cell: (local - peer) mod 2^32 < 2^31, so
+    # the wraparound-safe compare says peer ≼ local -> adoptable
+    peer = bc.BloomClock(cells=jnp.full((M,), 100, jnp.int32),
+                         base=jnp.zeros((), jnp.int32), k=c_cfg.k)
+    sess = {"clock": types.SimpleNamespace(clock=peer)}
+    mask = eng.adopt_many([sess])
+    assert list(mask) == [True]
+    after = (np.asarray(eng.clock.clock.logical_cells())
+             .astype(np.int64) & 0xFFFFFFFF)
+    np.testing.assert_array_equal(
+        after, local_u32.astype(np.int64),
+        err_msg="wrapped local clock corrupted by adopt_many merge")
+
+
+def test_adopt_routes_through_batched_classify_audit():
+    """Single-session adopt() is the batch-of-one path: its audit
+    record carries the real dispatch engine, not a fixed label."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.models.params import init_params
+    from repro.runtime.clock_runtime import ClockConfig, ClockRuntime
+    from repro.serving.engine import ServeConfig, ServingEngine
+
+    trail = AuditTrail(store_frames=True)
+    cfg32 = dataclasses.replace(get_smoke_config("qwen1_5_0_5b"),
+                                dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg32)
+    c_cfg = ClockConfig(m=M, fp_threshold=1.0,
+                        policy=CausalPolicy(fp_threshold=1.0,
+                                            observer=Observer(audit=trail)))
+    eng = ServingEngine(params, cfg32, ServeConfig(max_seq=32), c_cfg,
+                        replica_id="A")
+    eng.clock.tick("warm", 1)
+    peer = ClockRuntime(c_cfg, run_id="serve")
+    peer.clock = bc.merge(peer.clock, eng.clock.clock)
+    assert eng.adopt({"clock": peer})
+    recs = [r for r in trail.verdicts() if r.transport == "serving"]
+    assert recs and recs[-1].action == "adopt"
+    assert recs[-1].engine          # real engine label, never empty
+    rep = trail.replay_frames(
+        policy=dataclasses.replace(eng.clock.policy, observer=None))
+    assert rep.matched == rep.checked and not rep.mismatches

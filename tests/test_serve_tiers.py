@@ -1,0 +1,197 @@
+"""Tiered registry invariants.
+
+The contract under test: a ``TieredRegistry`` is an OPTIMIZATION, not a
+semantic — ``classify`` must be bit-identical (status flags AND Eq. 3
+fp floats) to one flat oversized ``ClockRegistry`` holding the same
+sessions, no matter how admit/release/touch/promote/demote/evict churn
+has scattered them across hot/warm/cold, and including int32-rim
+(near-wrap promoted) rows crossing tiers.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clock as bc
+from repro.fleet.registry import INT32_MAX, STATUS_NAMES, ClockRegistry
+from repro.serve.tiers import TierConfig, TieredRegistry
+
+M, K = 32, 3
+
+SMALL = TierConfig(hot_capacity=6, warm_capacity=10, promote_after=2,
+                   demote_batch=2, spill_batch=4, cold_batch=4)
+
+
+def _clock(rng, hi=6, base=0):
+    cells = jnp.asarray(rng.integers(0, hi, M), jnp.int32)
+    c = bc.BloomClock(cells=cells, base=jnp.zeros((), jnp.int32), k=K)
+    if base:
+        c = bc.BloomClock(cells=c.cells + jnp.int32(base),
+                          base=jnp.zeros((), jnp.int32), k=K)
+    return bc.compress(c)
+
+
+def _flat_of(tiered: TieredRegistry, clocks: dict) -> ClockRegistry:
+    """The reference: same sessions, one slab, SAME pinned policy (the
+    tiered registry pins its kernel blocks at flat-equivalent capacity,
+    so the flat slab must classify with the same blocks)."""
+    flat = ClockRegistry(capacity=max(8, 2 * len(clocks) + 4), m=M, k=K,
+                         policy=tiered.policy)
+    flat.admit_many(clocks)
+    return flat
+
+
+def _assert_bit_identical(tiered, clocks, query, msg=""):
+    view = tiered.classify(query)
+    flat = _flat_of(tiered, clocks)
+    ref = flat.classify_all(query)
+    for sid in clocks:
+        slot = flat.slot_of(sid)
+        assert view.verdict_of(sid) == STATUS_NAMES[int(ref.status[slot])], \
+            f"{msg} verdict drift for {sid} ({tiered._tier_of.get(sid)})"
+        got, want = view.fp_of(sid), float(ref.fp[slot])
+        assert got == want, \
+            f"{msg} fp drift for {sid}: {got!r} != {want!r}"
+
+
+def test_three_tier_spread_bit_identical():
+    rng = np.random.default_rng(0)
+    t = TieredRegistry(SMALL, m=M, k=K)
+    clocks = {f"s{i}": _clock(rng) for i in range(30)}
+    t.admit_many(clocks)
+    tiers_used = set(t._tier_of.values())
+    assert tiers_used == {"hot", "warm", "cold"}
+    q = bc.BloomClock(cells=jnp.full((M,), 9, jnp.int32),
+                      base=jnp.zeros((), jnp.int32), k=K)
+    _assert_bit_identical(t, clocks, q, "spread")
+    t.close()
+
+
+def test_promotion_crosses_tiers_bit_identical():
+    rng = np.random.default_rng(1)
+    t = TieredRegistry(SMALL, m=M, k=K)
+    clocks = {f"s{i}": _clock(rng) for i in range(24)}
+    t.admit_many(clocks)
+    cold_sid = next(s for s, tier in t._tier_of.items() if tier == "cold")
+    for _ in range(SMALL.promote_after):
+        t.touch(cold_sid)
+    assert t._tier_of[cold_sid] == "hot"
+    q = _clock(rng, hi=12)
+    _assert_bit_identical(t, clocks, q, "promotion")
+    t.close()
+
+
+def test_near_wrap_rows_cross_tiers_bit_identical():
+    """int32-rim sessions (base pushed against INT32_MAX, the PR-8
+    promoted-row representation) must survive hot→warm→cold demotion
+    and classify identically from every tier."""
+    rng = np.random.default_rng(2)
+    t = TieredRegistry(SMALL, m=M, k=K)
+    rim_base = INT32_MAX - 40
+    clocks = {f"rim{i}": _clock(rng, hi=5, base=rim_base) for i in range(4)}
+    clocks.update({f"s{i}": _clock(rng) for i in range(20)})
+    # admit rims FIRST: the later flood demotes them through the tiers
+    t.admit_many({s: clocks[s] for s in clocks if s.startswith("rim")})
+    t.admit_many({s: clocks[s] for s in clocks if not s.startswith("rim")})
+    rim_tiers = {t._tier_of[f"rim{i}"] for i in range(4)}
+    assert rim_tiers - {"hot"}, "flood should have demoted some rim rows"
+    q = _clock(rng, hi=5, base=rim_base + 20)
+    _assert_bit_identical(t, clocks, q, "near-wrap")
+    t.close()
+
+
+def test_release_and_targeted_classify():
+    rng = np.random.default_rng(3)
+    t = TieredRegistry(SMALL, m=M, k=K)
+    clocks = {f"s{i}": _clock(rng) for i in range(18)}
+    t.admit_many(clocks)
+    victims = ["s0", "s7", "s17"]
+    for sid in victims:
+        t.release(sid)
+        del clocks[sid]
+    assert all(sid not in t for sid in victims)
+    q = bc.BloomClock(cells=jnp.full((M,), 7, jnp.int32),
+                      base=jnp.zeros((), jnp.int32), k=K)
+    want = list(clocks)[:5]
+    view = t.classify(q, sids=want)
+    flat = _flat_of(t, clocks)
+    ref = flat.classify_all(q)
+    for sid in want:
+        slot = flat.slot_of(sid)
+        assert view.verdict_of(sid) == STATUS_NAMES[int(ref.status[slot])]
+        assert view.fp_of(sid) == float(ref.fp[slot])
+    t.close()
+
+
+def test_get_roundtrip_exact_across_tiers():
+    rng = np.random.default_rng(4)
+    t = TieredRegistry(SMALL, m=M, k=K)
+    clocks = {f"s{i}": _clock(rng) for i in range(26)}
+    clocks["rim"] = _clock(rng, hi=4, base=INT32_MAX - 9)
+    t.admit_many(clocks)
+    for sid, want in clocks.items():
+        got = t.get(sid, count=False)
+        np.testing.assert_array_equal(
+            np.asarray(got.logical_cells()),
+            np.asarray(want.logical_cells()),
+            err_msg=f"{sid} ({t._tier_of[sid]})")
+    t.close()
+
+
+# ---------------------------------------------------------------------------
+# interleaved operation sequences: hypothesis when available, plus a
+# seeded deterministic fallback so the property is exercised everywhere
+# ---------------------------------------------------------------------------
+def _run_interleaved(ops, seed):
+    """Any interleaving of admit / release / touch (touch triggers
+    promotion, admits trigger demotion + spill) leaves classify
+    bit-identical to the flat slab — flags and Eq. 3 fp."""
+    rng = np.random.default_rng(seed)
+    t = TieredRegistry(SMALL, m=M, k=K)
+    clocks = {}
+    for op, n, rim in ops:
+        sid = f"s{n}"
+        if op == "admit":
+            c = _clock(rng, hi=5,
+                       base=INT32_MAX - int(rng.integers(5, 60))
+                       if rim else 0)
+            clocks[sid] = c
+            t.admit(sid, c)
+        elif op == "release" and sid in clocks:
+            t.release(sid)
+            del clocks[sid]
+        elif op == "touch" and sid in clocks:
+            t.touch(sid)
+    if clocks:
+        q = _clock(rng, hi=10)
+        _assert_bit_identical(t, clocks, q, "interleaved")
+    t.close()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_interleaved_ops_seeded(seed):
+    rng = np.random.default_rng(1000 + seed)
+    ops = [(["admit", "release", "touch"][int(rng.integers(0, 3))],
+            int(rng.integers(0, 40)), bool(rng.integers(0, 4) == 0))
+           for _ in range(50)]
+    _run_interleaved(ops, seed)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised via the seeded variant
+    pass
+else:
+    _ops = st.lists(
+        st.one_of(
+            st.tuples(st.just("admit"), st.integers(0, 39),
+                      st.booleans()),       # (op, sid#, near_wrap_row?)
+            st.tuples(st.just("release"), st.integers(0, 39),
+                      st.just(False)),
+            st.tuples(st.just("touch"), st.integers(0, 39), st.just(False)),
+        ),
+        min_size=5, max_size=60)
+
+    @settings(max_examples=20, deadline=None)
+    @given(ops=_ops, seed=st.integers(0, 2**16))
+    def test_interleaved_ops_keep_flat_equivalence(ops, seed):
+        _run_interleaved(ops, seed)
