@@ -1,0 +1,374 @@
+"""Hybrid causality engine headline benchmark: ``BENCH_hybrid.json``.
+
+One measurement, the PR's acceptance demonstration: a seeded
+Zipf(1.1)-skewed churn workload at an EQUAL declared fp budget, served
+two ways:
+
+  pure-bloom   every session is a packed bloom row.  The budget is
+               binding at the smallest peer sum Σp — the tiny-history
+               hot sessions — so inverting paper Eq. 3 pins the whole
+               slab to a huge ``m_pure``;
+  hybrid       ``HybridEngine`` serves those tiny sessions EXACTLY
+               (fp ≡ 0, no cells at all) and only the long tail — whose
+               smallest Σp is orders of magnitude larger — constrains
+               the bloom geometry, so the same budget derives a much
+               smaller ``m_tail``.
+
+Same budget, ~``m_pure / m_tail`` less device work per classify: the
+hybrid fused sweep must come out ≥ 2x faster, with zero false
+negatives overall, measured fp = 0 on hot-set verdicts (not just
+claimed), tail verdicts bit-identical to a flat packed slab at the
+same blocks, and a mid-run ``AdaptivePolicy`` (m, k) resize that
+replays bit-for-bit from the audit trail.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_hybrid           # full
+  PYTHONPATH=src python -m benchmarks.bench_hybrid --quick   # CI smoke
+  PYTHONPATH=src python -m benchmarks.bench_hybrid --quick \
+      --check-against BENCH_hybrid.json --check-tolerance 0.5
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_fleet import _rec, check_against
+from repro.causal.engine import PackedSlab
+from repro.core import clock as bc
+from repro.core.hashing import bloom_indices, stable_event_id
+from repro.hybrid import (AdaptiveConfig, AdaptivePolicy, HybridConfig,
+                          HybridEngine, derive_mk, replay_resize)
+from repro.obs.audit import AuditTrail
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchCfg:
+    label: str
+    V: int                  # local chain length (Σq = k·V)
+    n_hot: int              # tiny-history sessions (the Zipf head)
+    n_tail: int             # long-history sessions (the tail)
+    tail_v_min: int = 64    # smallest tail prefix: the budget's binding Σp
+    k: int = 4
+    fp_budget: float = 1e-4
+    seed: int = 0
+    churn_rounds: int = 6   # classify rounds after the policy attaches
+    draws_per_round: int = 2048
+    reps: int = 5           # timed classifies per side
+
+    @property
+    def n(self) -> int:
+        return self.n_hot + self.n_tail
+
+
+QUICK = BenchCfg("quick", V=192, n_hot=24, n_tail=232, reps=3,
+                 draws_per_round=1024)
+FULL = BenchCfg("full", V=384, n_hot=48, n_tail=464)
+
+
+def _population(cfg: BenchCfg, rng) -> list:
+    """(sid, v, events) per session, Zipf-popularity order: the tiny
+    sessions come first (ranks 0..n_hot-1), the tail after."""
+    pop = []
+    # one exactly-equal session (v == V, no private events) for coverage
+    pop.append(("hot/0", cfg.V, ()))
+    for i in range(1, cfg.n_hot):
+        v = int(rng.integers(1, 9))
+        npriv = int(rng.integers(0, 3))
+        ev = tuple(stable_event_id(b"hybrid/bench-priv", i, j)
+                   for j in range(npriv))
+        pop.append((f"hot/{i}", v, ev))
+    # the first tail row sits exactly at the binding operating point
+    pop.append(("tail/0", cfg.tail_v_min, ()))
+    for i in range(1, cfg.n_tail):
+        v = int(rng.integers(cfg.tail_v_min, cfg.V))
+        npriv = int(rng.integers(0, 3))
+        ev = tuple(stable_event_id(b"hybrid/bench-priv", cfg.n_hot + i, j)
+                   for j in range(npriv))
+        pop.append((f"tail/{i}", v, ev))
+    return pop
+
+
+def _truth(V: int, v: int, n_private: int) -> tuple[bool, bool]:
+    """Ground-truth (query ≼ peer, peer ≼ query) for a session that is a
+    v-long prefix of the V-long local chain plus private events."""
+    return v >= V, n_private == 0
+
+
+def _verify_view(view, pop, V: int) -> dict:
+    """Count fn / measured-fp violations of one classify against ground
+    truth.  Bloom claims may only err one way (fp); the hot rows may
+    not err at all."""
+    out = {"fn": 0, "hot_fp": 0, "tail_fp": 0, "hot_claimed_max": 0.0,
+           "tail_claimed_max": 0.0}
+    by_sid = {sid: (v, len(ev)) for sid, v, ev in pop}
+    for i, sid in enumerate(view.sids):
+        v, npriv = by_sid[sid]
+        t_le, t_ge = _truth(V, v, npriv)
+        le, ge = bool(view.q_le_p[i]), bool(view.p_le_q[i])
+        if (t_le and not le) or (t_ge and not ge):
+            out["fn"] += 1
+        fp_measured = int((le and not t_le) or (ge and not t_ge))
+        claimed = max(float(view.fp_q_before_p[i]),
+                      float(view.fp_p_before_q[i]))
+        if view.hot[i]:
+            out["hot_fp"] += fp_measured
+            out["hot_claimed_max"] = max(out["hot_claimed_max"], claimed)
+        else:
+            out["tail_fp"] += fp_measured
+            out["tail_claimed_max"] = max(out["tail_claimed_max"], claimed)
+    return out
+
+
+def _merge(acc: dict, one: dict) -> None:
+    acc["fn"] += one["fn"]
+    acc["hot_fp"] += one["hot_fp"]
+    acc["tail_fp"] += one["tail_fp"]
+    acc["hot_claimed_max"] = max(acc["hot_claimed_max"],
+                                 one["hot_claimed_max"])
+    acc["tail_claimed_max"] = max(acc["tail_claimed_max"],
+                                  one["tail_claimed_max"])
+
+
+def _pure_slab(cfg: BenchCfg, m_pure: int, chain, pop):
+    """Mint the whole population as packed bloom rows at ``m_pure`` and
+    the full local chain as the query — the pure-bloom baseline that an
+    equal fp budget forces without the exact hot set."""
+    probes = np.stack([np.asarray(bloom_indices(np.uint32(hi),
+                                                np.uint32(lo),
+                                                cfg.k, m_pure), np.int64)
+                       for hi, lo in chain])
+    qcells = np.bincount(probes.ravel(), minlength=m_pure).astype(np.int64)
+    u8 = np.zeros((len(pop), m_pure), np.uint8)
+    base = np.zeros(len(pop), np.int32)
+    for i, (_, v, events) in enumerate(pop):
+        cells = np.bincount(probes[:v].ravel(),
+                            minlength=m_pure).astype(np.int64)
+        for hi, lo in events:
+            idx = np.asarray(bloom_indices(np.uint32(hi), np.uint32(lo),
+                                           cfg.k, m_pure), np.int64)
+            np.add.at(cells, idx, 1)
+        b = int(cells.min())
+        resid = cells - b
+        assert resid.max(initial=0) <= 255, "pure slab overflows u8 pack"
+        u8[i] = resid.astype(np.uint8)
+        base[i] = b
+    query = bc.BloomClock(cells=jnp.asarray(qcells.astype(np.int32)),
+                          base=jnp.zeros((), jnp.int32), k=cfg.k)
+    return PackedSlab(jnp.asarray(u8), jnp.asarray(base)), query
+
+
+def run_hybrid_bench(cfg: BenchCfg, records: list | None = None) -> list:
+    records = records if records is not None else []
+    rng = np.random.default_rng(cfg.seed)
+    B = cfg.fp_budget
+    pop = _population(cfg, rng)
+    sids = [sid for sid, _, _ in pop]
+    N, V, k = cfg.n, cfg.V, cfg.k
+
+    # -- equal-budget geometry on both sides (invert Eq. 3) ------------
+    sum_q = float(k * V)
+    min_p_all = float(k * min(v + len(ev) for _, v, ev in pop))
+    min_p_tail = float(k * min(v + len(ev) for sid, v, ev in pop
+                               if sid.startswith("tail/")))
+    m_pure, _ = derive_mk(B, sum_q, min_p_all, m_max=1 << 22, k=k)
+    m_tail, _ = derive_mk(B, sum_q, min_p_tail, m_max=1 << 22, k=k)
+    assert m_pure > m_tail, (m_pure, m_tail)
+    # start one fold above the derived tail geometry so the adaptive
+    # policy performs exactly one audited mid-run resize
+    m_start = 2 * m_tail
+
+    trail = AuditTrail(store_frames=True)
+    # capacity margin: near-boundary tail sessions may go hot too (and
+    # churn among themselves) without ever displacing the tiny head —
+    # displacing it would put a tiny Σp back in the tail and (correctly)
+    # veto the adaptive shrink
+    eng = HybridEngine(
+        HybridConfig(m=m_start, k=k, hot_capacity=cfg.n_hot + 8,
+                     tail_capacity=1 << (N - 1).bit_length(),
+                     promote_after=3, min_residency=0,
+                     max_migrations_per_window=1 << 30, window=1 << 30),
+        audit=trail)
+    eng.advance_local(V)
+    chain = [stable_event_id(b"hybrid/local", i) for i in range(V)]
+    for sid, v, events in pop:
+        eng.admit(sid, v=v, events=events)
+
+    # -- Zipf(1.1) churn: access counters promote the head -------------
+    def churn_round():
+        z = rng.zipf(1.1, cfg.draws_per_round)
+        for i in np.minimum(z - 1, N - 1):
+            eng.touch(sids[i])
+        # the head is the distribution's mode by construction; a sweep
+        # per round compresses what a longer draw would do and keeps its
+        # access floor above any single tail session's draw count
+        for _ in range(6):
+            for sid in sids[:cfg.n_hot]:
+                eng.touch(sid)
+
+    acc = {"fn": 0, "hot_fp": 0, "tail_fp": 0, "hot_claimed_max": 0.0,
+           "tail_claimed_max": 0.0}
+    for _ in range(2):
+        churn_round()
+        _merge(acc, _verify_view(eng.classify(), pop, V))
+    # the Zipf head is the tiny sessions by construction; finish any
+    # stragglers the draw missed before handing control to the policy.
+    # Sweep the whole head together so its access counts rise in
+    # lockstep and the cold tail rows become the swap victims.
+    for _ in range(10_000):
+        if all(eng.sessions[s].hot for s in sids[:cfg.n_hot]):
+            break
+        for sid in sids[:cfg.n_hot]:
+            eng.touch(sid)
+    assert all(eng.sessions[s].hot for s in sids[:cfg.n_hot]), \
+        "Zipf head never fully promoted"
+
+    # -- AdaptivePolicy: declared budget, derived geometry --------------
+    eng.adaptive = AdaptivePolicy(eng, AdaptiveConfig(fp_budget=B, window=3))
+    for _ in range(cfg.churn_rounds):
+        churn_round()
+        _merge(acc, _verify_view(eng.classify(), pop, V))
+    assert eng.resizes == 1, f"expected one adaptive resize, got {eng.resizes}"
+    assert eng.m == m_tail, (eng.m, m_tail)
+    rep = replay_resize(trail)
+    assert rep.ok and rep.matched == rep.checked, rep.summary()
+
+    # -- correctness: zero fn anywhere, zero fp (measured) on the hot set
+    assert all(eng.sessions[s].hot for s in sids[:cfg.n_hot]), \
+        "churn displaced the Zipf head from the hot set"
+    final = _verify_view(eng.classify(), pop, V)
+    _merge(acc, final)
+    assert acc["fn"] == 0, f"false negatives: {acc}"
+    assert acc["hot_fp"] == 0 and acc["hot_claimed_max"] == 0.0, acc
+    assert acc["tail_claimed_max"] <= B * 1.01, acc
+
+    # -- tail bit-identity vs a flat packed slab at the SAME blocks ----
+    bn, bm = 128, min(m_tail, 512)
+    view = eng.classify(bn=bn, bm=bm)
+    slab = eng.slab()
+    flat = eng.engine.classify(
+        eng.local_clock(),
+        PackedSlab(slab.cells_u8, slab.base, wide=slab.wide),
+        bn=bn, bm=bm)
+    H = slab.hot_count
+    for name in ("q_le_p", "p_le_q", "fp_q_before_p", "fp_p_before_q",
+                 "sum_p"):
+        hyb_tail = np.asarray(getattr(view, name))[H:]
+        assert np.array_equal(hyb_tail, np.asarray(getattr(flat, name))), \
+            f"tail {name} diverged from the flat packed slab"
+
+    # -- timing: equal budget, two engines ------------------------------
+    shape = f"n{N}_v{V}_fp{B:g}"
+    eng.classify(bn=bn, bm=bm)                       # hybrid warmup
+    t0 = time.perf_counter()
+    for _ in range(cfg.reps):
+        view = eng.classify(bn=bn, bm=bm)            # HybridView is host-
+    t_hyb = (time.perf_counter() - t0) / cfg.reps    # side: synced
+
+    pure, query = _pure_slab(cfg, m_pure, chain, pop)
+
+    def pure_classify():
+        res = eng.engine.classify(query, pure, bn=bn, bm=min(m_pure, 512))
+        jax.block_until_ready(res.q_le_p)
+        return res
+
+    res = pure_classify()                            # warmup + sanity
+    pq = {sid: (bool(np.asarray(res.q_le_p)[i]),
+                bool(np.asarray(res.p_le_q)[i]))
+          for i, sid in enumerate(sids)}
+    for sid, v, events in pop:
+        t_le, t_ge = _truth(V, v, len(events))
+        assert (not t_le or pq[sid][0]) and (not t_ge or pq[sid][1]), \
+            f"pure-bloom fn on {sid}"
+    t0 = time.perf_counter()
+    for _ in range(cfg.reps):
+        pure_classify()
+    t_pure = (time.perf_counter() - t0) / cfg.reps
+
+    speedup = t_pure / t_hyb
+    _rec(records, "pure_bloom_classify", shape, t_pure / N,
+         policy=f"fp{B:g}", engine="packed")
+    _rec(records, "hybrid_classify", shape, t_hyb / N,
+         reference="pure_bloom_classify", speedup=speedup,
+         policy=f"fp{B:g}", engine=view.engine)
+    records.append({
+        "op": "hybrid_verify", "shape": shape, "shards": 1,
+        "ms": None, "speedup_vs_reference": None, "reference": None,
+        "policy": f"fp{B:g}", "engine": view.engine,
+        "transport": "verify",          # correctness ledger: never gated
+        "digest_bytes": None, "delta_bytes": None, "pushback_bytes": None,
+        "m_pure": m_pure, "m_start": m_start, "m_tail": m_tail,
+        "hot_rows": H, "tail_rows": N - H,
+        "fn_violations": acc["fn"],
+        "hot_fp_measured": acc["hot_fp"],
+        "hot_fp_claimed_max": acc["hot_claimed_max"],
+        "tail_fp_measured": acc["tail_fp"],
+        "tail_fp_claimed_max": acc["tail_claimed_max"],
+        "promotions": eng.promotions, "demotions": eng.demotions,
+        "resizes": eng.resizes,
+        "resize_replay": rep.summary(),
+        "hot_hit_rate": round(H / N, 4),
+    })
+    rows = [
+        (f"pure_bloom_classify {shape}_m{m_pure}", t_pure / N * 1e6,
+         f"{N / t_pure:.0f} rows/s at m={m_pure}"),
+        (f"hybrid_classify {shape}_m{m_tail}", t_hyb / N * 1e6,
+         f"{N / t_hyb:.0f} rows/s at m={m_tail} (+{H} exact), "
+         f"{speedup:.2f}x vs pure bloom"),
+    ]
+    if speedup < 2.0:
+        print(f"# FAIL: hybrid classify only {speedup:.2f}x pure bloom "
+              f"(acceptance needs >= 2x)", file=sys.stderr)
+        sys.exit(1)
+    return rows
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="CI smoke: the quick-shape leg only")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--fp-budget", type=float, default=1e-4)
+    p.add_argument("--json", default="BENCH_hybrid.json")
+    p.add_argument("--check-against", default=None, metavar="BASELINE",
+                   help="compare against a recorded BENCH_hybrid.json "
+                        "and exit nonzero if a gated op regressed")
+    p.add_argument("--check-tolerance", type=float, default=0.15)
+    args = p.parse_args(argv)
+
+    records: list = []
+    cfgs = [QUICK] if args.quick else [QUICK, FULL]
+    rows = []
+    for cfg in cfgs:
+        cfg = dataclasses.replace(cfg, seed=args.seed,
+                                  fp_budget=args.fp_budget)
+        rows += run_hybrid_bench(cfg, records=records)
+    print("name,us_per_item,derived")
+    for name, us, derived in rows:
+        print(f'{name},{us:.2f},"{derived}"')
+    with open(args.json, "w") as f:
+        json.dump({"backend": jax.default_backend(),
+                   "interpret": jax.default_backend() != "tpu",
+                   "records": records}, f, indent=1)
+        f.write("\n")
+    print(f"# wrote {len(records)} records -> {args.json}")
+    if args.check_against:
+        failures = check_against(args.check_against, records,
+                                 tolerance=args.check_tolerance)
+        if failures:
+            print(f"# REGRESSION vs {args.check_against}:", file=sys.stderr)
+            for line in failures:
+                print(f"#   {line}", file=sys.stderr)
+            sys.exit(1)
+        print(f"# no regressions vs {args.check_against} "
+              f"(tolerance {args.check_tolerance:.0%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -158,6 +158,17 @@ def bench_churn(cfg: ChurnConfig, records: list | None = None) -> list:
         "digest_bytes": None,
         "delta_bytes": None,
         "pushback_bytes": None,
+        # digest-cache effectiveness and tier placement as TOP-LEVEL
+        # columns (not just nested obs counters) so a --check-against
+        # gate — and anyone grepping the JSON — can regress on them
+        "cache_hits": d.get("cache_hits"),
+        "cache_misses": d.get("cache_misses"),
+        "cache_hit_rate": (d["cache_hits"]
+                           / max(1, d["cache_hits"] + d["cache_misses"])
+                           if d.get("cache_hits") is not None else None),
+        "tier_hot": d["tier_counts"].get("hot", 0),
+        "tier_warm": d["tier_counts"].get("warm", 0),
+        "tier_cold": d["tier_counts"].get("cold", 0),
         "serve": {**d, "slo_p99_ms": SLO_P99_MS,
                   "slo_met": report.p99_ms <= SLO_P99_MS},
     }

@@ -158,6 +158,9 @@ class CausalEngine:
         interpret = interpret if interpret is not None else pol.interpret
         ops.LAST_DISPATCH.clear()
         if isinstance(peers, PackedSlab):
+            hot_meta = getattr(peers, "hot_meta", None)
+            if hot_meta is not None and np.shape(hot_meta)[0] > 0:
+                return self._classify_hybrid(q, peers, bn, bm, interpret)
             if pol.mesh is not None:
                 out = ops._classify_vs_many_packed_sharded(
                     q, peers.cells_u8, peers.base, mesh=pol.mesh,
@@ -185,6 +188,33 @@ class CausalEngine:
             kw["bm"] = bm
         out = ops._classify_vs_many(q, cells, interpret=interpret, **kw)
         return ClassifyResult.from_dict(out, engine="i32")
+
+    def _classify_hybrid(self, q, peers, bn, bm, interpret) -> ClassifyResult:
+        """Hot-carrying slab (``repro.hybrid.HybridSlab``-shaped, duck
+        typed on ``hot_meta``): ONE fused kernel sweep covers the exact
+        hot rows and the packed bloom tail — hot verdicts come back with
+        fp ≡ 0, tail verdicts bit-identical to a flat packed slab at the
+        same blocks.  Result rows are hot-first: [0, H) hot, then the
+        tail.  The hot set is a handful of metadata rows, so the sweep
+        stays unsharded even under a mesh policy (the tail-sharded
+        variant is a ROADMAP item)."""
+        pol = self.policy
+        out = ops._classify_hybrid(
+            q, int(peers.local_version), peers.hot_meta, peers.hot_sums,
+            peers.cells_u8, peers.base, bn=bn, bm=bm, interpret=interpret,
+            use_autotune=pol.autotune)
+        engine, blocks = _dispatch_label("hybrid")
+        if peers.wide:
+            # wide keys index TAIL slots; result rows shift by the hot
+            # block, and the overlay must patch the shifted positions
+            H = int(np.shape(peers.hot_meta)[0])
+            widx = sorted(peers.wide)
+            out = ops._overlay_wide_classify(
+                out, q, [H + s for s in widx],
+                jnp.asarray(np.stack([peers.wide[s] for s in widx])),
+                interpret=interpret)
+            engine += "+wide_overlay"
+        return ClassifyResult.from_dict(out, engine=engine, blocks=blocks)
 
     # ------------------------------------------------------------------
     # verb 2: all-pairs compare
@@ -239,6 +269,11 @@ class CausalEngine:
         interpret = interpret if interpret is not None else pol.interpret
         ops.LAST_DISPATCH.clear()
         if isinstance(clocks, PackedSlab):
+            if getattr(clocks, "hot_meta", None) is not None:
+                raise ValueError(
+                    "hot-carrying slabs are classify-only here; use "
+                    "repro.hybrid.HybridEngine.pairs for the fused "
+                    "all-pairs sweep")
             if cols is not None:
                 raise ValueError(
                     "PackedSlab pairs are symmetric; cols is not supported")

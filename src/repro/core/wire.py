@@ -20,6 +20,24 @@ Clock frame layout (``encode_clock`` / ``decode_clock``):
     ...          cells payload: m bytes (u8) or 4·m bytes (i32)
     last 4       CRC32 over everything before it, u32
 
+Exact-row frames (``encode_exact`` / ``decode_exact``, wire version 2)
+carry the hybrid engine's hot-set representation: not bloom cells at all
+but the exact causal coordinates of a session relative to its minting
+replica's local chain — the chain-prefix length ``v``, the count of
+private (post-fork) events, and the private event ids themselves.  A
+receiver holding the same chain can then answer ordering queries with
+ZERO false positives (integer compares, no Eq. 3 exposure), which is
+the whole point of promoting a hot session out of the bloom slab.
+Layout:
+
+    bytes 0-1    magic ``b"BE"``
+    byte  2      wire version
+    byte  3      k (geometry the session's shadow bloom row uses)
+    bytes 4-11   v (local-chain prefix length), u64
+    bytes 12-15  n_private (private events past the prefix), u32
+    ...          n_private × 16 bytes: (event_hi u64, event_lo u64) pairs
+    last 4       CRC32 over everything before it, u32
+
 Digest frames (``encode_digest`` / ``decode_digest``) are the tiny
 per-peer summaries anti-entropy sessions exchange FIRST: a peer whose
 digest matches what the caller already ingested is skipped entirely, so
@@ -44,21 +62,30 @@ __all__ = [
     "encode_clock",
     "decode_clock",
     "clock_frame_nbytes",
+    "encode_exact",
+    "decode_exact",
+    "exact_frame_nbytes",
     "cells_crc",
     "digest_of",
     "encode_digest",
     "decode_digest",
 ]
 
-WIRE_VERSION = 1
+#: version 2 added the exact-row frame kind (``b"BE"``) for the hybrid
+#: engine's hot set; clock/digest layouts are unchanged from version 1.
+WIRE_VERSION = 2
 
 _CLOCK_MAGIC = b"BC"
 _DIGEST_MAGIC = b"BD"
+_EXACT_MAGIC = b"BE"
 _U8, _I32 = 0, 1
 
 _CLOCK_HDR = struct.Struct("!2sBBBxIi")
 #                magic ver k idlen pad m  sum  base crc
 _DIGEST_HDR = struct.Struct("!2sBBBxIdiI")
+#               magic ver k  v  n_private
+_EXACT_HDR = struct.Struct("!2sBBQI")
+_EVENT = struct.Struct("!QQ")
 _CRC = struct.Struct("!I")
 
 
@@ -166,6 +193,68 @@ def decode_clock(buf: bytes) -> dict:
 def clock_frame_nbytes(m: int, packed: bool = True) -> int:
     """Encoded frame size for an m-cell clock (u8 vs promoted int32)."""
     return _CLOCK_HDR.size + m * (1 if packed else 4) + _CRC.size
+
+
+# ---------------------------------------------------------------------------
+# exact-row frames (hybrid hot set)
+# ---------------------------------------------------------------------------
+
+def encode_exact(meta: dict) -> bytes:
+    """Encode an exact hot-row snapshot ``{"v", "n_private", "events",
+    "k"}`` as one binary frame.
+
+    ``events`` is the sequence of private (event_hi, event_lo) id pairs;
+    its length must equal ``n_private`` (when ``n_private`` is present)
+    because a receiver reconstructs concurrency verdicts from the count
+    and re-mints the session's shadow bloom row from the ids.
+    """
+    events = [(int(hi), int(lo)) for hi, lo in meta.get("events", ())]
+    n_private = int(meta.get("n_private", len(events)))
+    if n_private != len(events):
+        raise ValueError(
+            f"n_private={n_private} disagrees with {len(events)} event ids")
+    body = _EXACT_HDR.pack(_EXACT_MAGIC, WIRE_VERSION, int(meta["k"]),
+                           int(meta["v"]), n_private)
+    body += b"".join(_EVENT.pack(hi & 0xFFFFFFFFFFFFFFFF,
+                                 lo & 0xFFFFFFFFFFFFFFFF)
+                     for hi, lo in events)
+    return body + _CRC.pack(zlib.crc32(body))
+
+
+def decode_exact(buf: bytes) -> dict:
+    """Decode one exact-row frame; same absolute contract as clock
+    frames — truncation, trailing garbage, CRC mismatch, or version skew
+    raise :class:`WireFormatError`, never a partially-decoded row."""
+    buf = bytes(buf)
+    _check_magic_version(buf, _EXACT_MAGIC, "exact")
+    if len(buf) < _EXACT_HDR.size:
+        raise WireFormatError(
+            f"truncated exact frame: {len(buf)} bytes, need "
+            f"{_EXACT_HDR.size} for the header")
+    _, _, k, v, n_private = _EXACT_HDR.unpack_from(buf)
+    expect = _EXACT_HDR.size + n_private * _EVENT.size + _CRC.size
+    if len(buf) < expect:
+        raise WireFormatError(
+            f"truncated exact frame: {len(buf)} bytes, header declares "
+            f"n_private={n_private} = {expect}")
+    if len(buf) > expect:
+        raise WireFormatError(
+            f"oversized exact frame: {len(buf)} bytes, header declares "
+            f"{expect} — {len(buf) - expect} trailing bytes")
+    (crc,) = _CRC.unpack_from(buf, expect - _CRC.size)
+    if crc != zlib.crc32(buf[: expect - _CRC.size]):
+        raise WireFormatError(
+            "corrupted exact frame: CRC32 mismatch over header + events")
+    events = tuple(
+        _EVENT.unpack_from(buf, _EXACT_HDR.size + i * _EVENT.size)
+        for i in range(n_private))
+    return {"v": int(v), "n_private": int(n_private), "events": events,
+            "k": int(k)}
+
+
+def exact_frame_nbytes(n_private: int) -> int:
+    """Encoded frame size for an exact row with ``n_private`` events."""
+    return _EXACT_HDR.size + n_private * _EVENT.size + _CRC.size
 
 
 # ---------------------------------------------------------------------------

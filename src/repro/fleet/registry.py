@@ -97,11 +97,15 @@ def _near_wrap(base: np.ndarray) -> np.ndarray:
     return (base > INT32_MAX - NEAR_WRAP_MARGIN) | (base < 0)
 
 
-def _pow2_bucket(n: int) -> int:
+def _pow2_bucket(n: int, cap: int | None = None) -> int:
     """Next power of two ≥ n: batched mutations pad to these buckets so
     the compiled scatter/gather shape count stays logarithmic under
-    churny variable-size admit/evict waves."""
-    return 1 << max(0, n - 1).bit_length() if n > 1 else n
+    churny variable-size admit/evict waves.  ``cap`` (the slab
+    capacity) clamps the bucket: a batch one past a pow2 boundary must
+    not pad beyond the slab and rely on downstream crop — there are no
+    valid slots to alias the padding to past capacity."""
+    bucket = 1 << max(0, n - 1).bit_length() if n > 1 else n
+    return bucket if cap is None else min(bucket, cap)
 
 DEAD = -1
 ANCESTOR = 0
@@ -396,7 +400,7 @@ class ClockRegistry:
         with self.obs.trace.span("registry.evict", n=len(idx)):
             for pid in peer_ids:
                 del self._slot_of[pid]
-            pidx = idx + [idx[-1]] * (_pow2_bucket(len(idx)) - len(idx))
+            pidx = idx + [idx[-1]] * (_pow2_bucket(len(idx), self.capacity) - len(idx))
             self.alive = self._place1d(
                 self.alive.at[jnp.asarray(pidx)].set(False))
             self._alive_host[idx] = False
@@ -419,7 +423,8 @@ class ClockRegistry:
         if not live:
             return None
         slots = [slot for _, slot in live]
-        slots += [slots[-1]] * (_pow2_bucket(len(slots)) - len(slots))
+        slots += [slots[-1]] * (_pow2_bucket(len(slots), self.capacity)
+                                - len(slots))
         jidx = jnp.asarray(slots)
         u8 = np.asarray(jnp.take(self.cells_u8, jidx, axis=0))
         sums = np.asarray(jnp.take(self.sums, jidx))
@@ -441,7 +446,7 @@ class ClockRegistry:
         # the mod-2^32 fold) and sum them in ONE batched op: per-clock
         # eager dispatches dominate bulk admits otherwise
         n0 = len(clocks)
-        n = _pow2_bucket(n0)
+        n = _pow2_bucket(n0, self.capacity)
         logical_h = np.empty((n, self.m), np.int32)
         for pos, c in enumerate(clocks):
             cells = np.asarray(c.cells, np.int64)

@@ -59,11 +59,13 @@ __all__ = [
     "lookup",
     "key_for",
     "predict_cost",
+    "predict_hybrid_cost",
     "predict_sharded_cost",
     "prune",
     "autotune_matrix",
     "autotune_matrix_sharded",
     "autotune_one_vs_many",
+    "autotune_hybrid",
     "autotune_shapes",
     "table_path",
     "load_table",
@@ -221,6 +223,23 @@ def predict_cost(engine: str, N: int, M: int, m: int,
     esize = 4 if engine == "i32" else 1
     hbm = steps * (bi + bj) * bm * esize * c["hbm"]
     return steps * c["step_overhead"] + max(compute, hbm)
+
+
+def predict_hybrid_cost(N: int, H: int, m: int, bn: int, bm: int,
+                        interpret: bool) -> float:
+    """Predicted seconds for one fused hot+tail hybrid classify.
+
+    The fused kernel runs a UNIFORM body (both the exact hot verdict and
+    the packed tail math execute every step, a select picks the valid
+    side), so hot and tail row-tiles cost alike per grid step; the
+    hybrid speedup the bench demonstrates comes from the smaller tail
+    geometry ``m`` an fp budget allows once the fp-binding hot sessions
+    are carried exactly — which this model sees through ``m``.  ``N`` is
+    the TOTAL row count, ``H`` of which are hot."""
+    c = _MODEL[_backend(interpret)]
+    T = max(N - H, 1)
+    steps = (-(-H // bn) + -(-T // bn)) * (-(-m // bm))
+    return steps * (c["step_overhead"] + bn * bm * (c["elem"] + c["hbm"]))
 
 
 def _host_serialized(interpret: bool) -> bool:
@@ -490,6 +509,67 @@ def autotune_one_vs_many(N: int, m: int, *, span: int = 30,
     return min(results, key=lambda r: r["us"])
 
 
+def autotune_hybrid(N: int, m: int, *, hot: int | None = None,
+                    span: int = 30, interpret: bool | None = None,
+                    verbose: bool = False, explain: dict | None = None):
+    """Race block shapes for the fused hot+tail hybrid classify.
+
+    ``N`` is the TOTAL row count; ``hot`` (default N // 8) of those are
+    exact hot rows, the rest the packed bloom tail.  Winners land under
+    ``key_for("hybrid", N, hot, m, ...)`` — the hot count rides in the
+    M slot — matching the ``ops._hybrid_blocks`` lookup."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    from repro.kernels import ops
+    hot = hot if hot is not None else max(8, N // 8)
+    T = max(8, N - hot)
+    cells, base = _rand_packed(T, m, span)
+    q = cells[0].astype(jnp.int32)
+    rng = np.random.default_rng(1)
+    meta = jnp.asarray(np.stack([rng.integers(0, 64, hot),
+                                 rng.integers(0, 4, hot)], axis=1), jnp.int32)
+    hsums = jnp.asarray(rng.integers(0, 64 * span, (hot, 1)), jnp.float32)
+
+    grid = []
+    for bn in (8, 32, 128, 256):
+        for bm in (128, 256, 512, 1024):
+            if (_divisor_blocks(T, (bn,), 8)
+                    and _divisor_blocks(m, (bm,), 128)):
+                grid.append((bn, bm))
+    predicted = [predict_hybrid_cost(N, hot, m, bn, bm, interpret)
+                 for (bn, bm) in grid]
+    survivors = prune(grid, predicted)
+    if explain is not None:
+        ranking = sorted(zip(grid, predicted), key=lambda t: t[1])
+        explain["grid"] = len(grid)
+        explain["predicted"] = [
+            {"engine": "hybrid", "bn": bn, "bm": bm, "pred_us": p * 1e6}
+            for (bn, bm), p in ranking]
+        explain["survivors"] = len(survivors)
+
+    results = []
+    for bn, bm in survivors:
+        try:
+            dt = _measure(lambda: ops._classify_hybrid(
+                q, 32, meta, hsums, cells, base, bn=bn, bm=bm,
+                interpret=interpret, use_autotune=False))
+        except Exception:
+            continue
+        results.append({"engine": "hybrid", "bn": bn, "bm": bm,
+                        "us": dt * 1e6})
+        if verbose:
+            print(f"  hybrid bn={bn} bm={bm}: {dt*1e3:.2f} ms")
+    if not results:
+        raise RuntimeError(f"no viable hybrid candidates N={N} m={m}")
+    if explain is not None:
+        explain["measured"] = sorted(results, key=lambda r: r["us"])
+    return min(results, key=lambda r: r["us"])
+
+
 def autotune_shapes(shapes, *, shard_counts=(), interpret: bool | None = None,
                     verbose: bool = False, observer=None,
                     explains: dict | None = None) -> dict:
@@ -519,7 +599,8 @@ def autotune_shapes(shapes, *, shard_counts=(), interpret: bool | None = None,
             obs.metrics.counter(f"autotune.{k}", op=op).inc(
                 SEARCH_STATS[k] - before[k])
         if explains is not None:
-            explains[key_for(op, N, N, m, interp, kw.get("shards", 1))] = exp
+            explains[key_for(op, N, kw.get("M", N), m, interp,
+                             kw.get("shards", 1))] = exp
         if verbose:
             print(f"  -> {best}")
         return best
@@ -537,6 +618,15 @@ def autotune_shapes(shapes, *, shard_counts=(), interpret: bool | None = None,
             "one_vs_many", N, m,
             lambda explain: autotune_one_vs_many(
                 N, m, interpret=interpret, verbose=verbose, explain=explain))
+        hot = max(8, N // 8)
+        if verbose:
+            print(f"[autotune] hybrid N={N} hot={hot} m={m}")
+        out[key_for("hybrid", N, hot, m, interp)] = swept(
+            "hybrid", N, m,
+            lambda explain, hot=hot: autotune_hybrid(
+                N, m, hot=hot, interpret=interpret, verbose=verbose,
+                explain=explain),
+            M=hot)
         for d in shard_counts:
             if d < 2 or N % d:
                 continue

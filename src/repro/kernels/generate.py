@@ -1,6 +1,6 @@
 """Named engine instances emitted from the compare-kernel template.
 
-This module is the ONLY place the six production engines are defined:
+This module is the ONLY place the seven production engines are defined:
 each public function below builds a ``CompareSpec`` from its knobs and
 calls ``template.emit`` — there are no hand-rolled kernel bodies left
 anywhere in the tree.  Signatures are byte-for-byte the ones the old
@@ -26,6 +26,7 @@ __all__ = [
     "bloom_matrix_tri_pallas",
     "bloom_matrix_packed_pallas",
     "bloom_matrix_mxu_pallas",
+    "bloom_hybrid_classify_pallas",
 ]
 
 # the template point each named engine is an instance of (default blocks)
@@ -43,6 +44,9 @@ ENGINE_SPECS = {
     "matrix_mxu": CompareSpec(
         topology="mxu", pack="u8", bi=128, bj=128, bm=128,
         with_base=True, n_thresholds=64),
+    "hybrid_one_vs_many": CompareSpec(
+        topology="hybrid", pack="u8", bi=8, bm=512,
+        with_base=True, with_stats=True),
 }
 
 
@@ -150,3 +154,24 @@ def bloom_matrix_mxu_pallas(
                           n_thresholds=n_thresholds))
     return fn(rows, cols, row_base, col_base,
               lo=lo, m_true=m_true, interpret=interpret)
+
+
+def bloom_hybrid_classify_pallas(
+    q: jax.Array,          # [1, m] int32 logical query, zero-padded
+    v_local: jax.Array,    # [1, 1] int32 local-chain version V
+    hot_meta: jax.Array,   # [H, 2] int32 (v, n_private) per hot row
+    hot_sums: jax.Array,   # [H, 1] float32 shadow-row total sums
+    tail: jax.Array,       # [T, m] uint8 residual slab, T % bn == 0
+    tail_base: jax.Array,  # [T, 1] int32 per-slot offsets
+    *,
+    bn: int = 8,
+    bm: int = 512,
+    m_true: int | None = None,
+    interpret: bool = False,
+):
+    """Fused hot+tail classify: exact verdicts (fp ≡ 0) for the hot
+    rows, packed one-vs-many bloom verdicts for the tail, one kernel."""
+    fn = emit(CompareSpec(topology="hybrid", pack="u8",
+                          bi=bn, bm=bm, with_base=True, with_stats=True))
+    return fn(q, v_local, hot_meta, hot_sums, tail, tail_base,
+              m_true=m_true, interpret=interpret)

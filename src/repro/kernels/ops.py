@@ -45,6 +45,7 @@ from repro.kernels.bloom_matrix import (
     bloom_one_vs_many_pallas,
 )
 from repro.kernels.bloom_tick import bloom_tick_pallas
+from repro.kernels.generate import bloom_hybrid_classify_pallas
 from repro.kernels.pack import U8_MAX
 
 __all__ = [
@@ -367,6 +368,75 @@ def _overlay_wide_classify(out: dict, q: jax.Array, wide_idx,
                 "fp_q_before_p", "fp_p_before_q"):
         patched[key] = jnp.asarray(out[key]).at[idx].set(wout[key])
     return patched
+
+
+# ---------------------------------------------------------------------------
+# hybrid classify (exact hot rows + packed tail, one fused kernel)
+# ---------------------------------------------------------------------------
+
+def _hybrid_blocks(N: int, H: int, m: int, bn, bm, interpret: bool,
+                   use_table: bool = True):
+    """Resolve hybrid block defaults: explicit args > autotune (keyed on
+    total rows AND hot count — the hot/tail split changes the winning
+    tile) > per-backend defaults."""
+    if bn is None or bm is None:
+        cfg = (autotune.lookup("hybrid", N, H, m, interpret) or {}) \
+            if use_table else {}
+        bn = bn or cfg.get("bn", 8 if not interpret else 128)
+        bm = bm or cfg.get("bm", 512)
+    return bn, bm
+
+
+def _classify_hybrid(
+    q: jax.Array,            # [m] int32 local (query) logical cells
+    v_local: int,            # local-chain version V the hot rows are vs
+    hot_meta: jax.Array,     # [H, 2] int32 (v, n_private) exact rows
+    hot_sums: jax.Array,     # [H] (or [H, 1]) f32 shadow-row total sums
+    tail: jax.Array,         # [T, m] uint8 residual slab
+    tail_base: jax.Array,    # [T] (or [T, 1]) int32 per-slot offsets
+    *,
+    bn: int | None = None,
+    bm: int | None = None,
+    interpret: bool | None = None,
+    use_autotune: bool = True,
+):
+    """One query vs an exact hot set PLUS a packed bloom tail, fused.
+
+    Hot rows never touch bloom cells: their verdicts are integer
+    compares of (v, n_private) chain coordinates against ``v_local`` —
+    measured AND claimed fp are identically zero.  Tail rows run the
+    packed one-vs-many math unchanged, so their verdicts/sums/fp stay
+    bit-identical to a flat packed slab classified with the same bm.
+    Returns the ``_classify_dict`` layout over H+T rows, hot first.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    (m,) = q.shape
+    H = hot_meta.shape[0]
+    T, mt_ = tail.shape
+    assert m == mt_, (q.shape, tail.shape)
+    assert H > 0 and T > 0, "hybrid needs both a hot set and a tail " \
+        "(route single-representation slabs through the plain engines)"
+    bn, bm = _hybrid_blocks(H + T, H, m, bn, bm, interpret, use_autotune)
+    tail_p, bn_eff, bm_eff = tile2d(tail, bn, bm)
+    q_p = pad_to(q[None, :], tail_p.shape[1], axis=1)
+    base_p = _pad_base(tail_base, tail_p.shape[0])
+    # pad hot rows to the tile grain with (v=0, n_private=0) filler —
+    # cropped below, never observable
+    meta_p = pad_to(jnp.asarray(hot_meta, jnp.int32), bn_eff, axis=0)
+    hsum_p = pad_to(
+        jnp.asarray(hot_sums, jnp.float32).reshape(-1, 1), bn_eff, axis=0)
+    vloc = jnp.full((1, 1), v_local, jnp.int32)
+    _note_dispatch("hybrid", "fused_hot_tail", bn=bn_eff, bm=bm_eff,
+                   hot=H, tail=T)
+    flags, sums, fp = bloom_hybrid_classify_pallas(
+        q_p, vloc, meta_p, hsum_p, tail_p, base_p,
+        bn=bn_eff, bm=bm_eff, m_true=m, interpret=interpret)
+    Hp = meta_p.shape[0]
+    flags = jnp.concatenate([flags[:H], flags[Hp:Hp + T]], axis=0)
+    sums = jnp.concatenate([sums[:H], sums[Hp:Hp + T]], axis=0)
+    fp = jnp.concatenate([fp[:H], fp[Hp:Hp + T]], axis=0)
+    return _classify_dict(flags, sums, fp, H + T)
 
 
 # ---------------------------------------------------------------------------

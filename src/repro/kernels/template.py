@@ -11,7 +11,13 @@ m-tile.  This module is that design written once, parameterized by a
     topology        "tri" (block-upper-triangle sweep over one slab),
                     "rect" (full rectangle, rows x cols),
                     "mxu" (thermometer dot_general violation counts),
-                    "one_vs_many" (one query row vs a peer slab)
+                    "one_vs_many" (one query row vs a peer slab),
+                    "hybrid" (one query vs exact hot rows + packed tail
+                    in ONE grid: leading row-tiles answer from exact
+                    (v, n_private) chain coordinates with fp pinned to
+                    0.0, trailing tiles run the unmodified packed
+                    one-vs-many math so tail verdicts stay bit-identical
+                    to the flat slab)
     pack            "u8" (quantized residuals + per-row int32 base) or
                     "i32" (logical cells)
     bi / bj / bm    block shapes (bi doubles as bn for one_vs_many)
@@ -57,7 +63,7 @@ __all__ = [
     "PACKS",
 ]
 
-TOPOLOGIES = ("tri", "rect", "mxu", "one_vs_many")
+TOPOLOGIES = ("tri", "rect", "mxu", "one_vs_many", "hybrid")
 PACKS = ("u8", "i32")
 _ACCS = ("int8", "int32")
 
@@ -90,7 +96,7 @@ class CompareSpec:
         if self.acc is not None:
             return {"int8": jnp.int8, "int32": jnp.int32}[self.acc]
         # pinned defaults: what the hand-rolled kernels accumulated in
-        if self.topology == "one_vs_many" or self.pack == "i32":
+        if self.topology in ("one_vs_many", "hybrid") or self.pack == "i32":
             return jnp.int32
         return jnp.int8
 
@@ -134,6 +140,13 @@ def validate(spec: CompareSpec, backend: str | None = None) -> None:
         raise ValueError("n_thresholds is an mxu-only knob")
     if spec.topology == "one_vs_many" and not spec.with_stats:
         raise ValueError("one_vs_many always emits stats (flags+sums+fp)")
+    if spec.topology == "hybrid":
+        if spec.pack != "u8":
+            raise ValueError("hybrid's tail slab is packed-only "
+                             "(pack='u8'); hot rows carry no cells at all")
+        if not (spec.with_stats and spec.with_base):
+            raise ValueError("hybrid always emits stats and folds tail "
+                             "bases (with_stats=True, with_base=True)")
     if spec.topology == "rect" and spec.pack == "i32" and not spec.with_stats:
         raise ValueError("rect/i32 is the stats engine (with_stats=True)")
     if spec.with_stats and spec.topology in ("tri", "rect") \
@@ -160,6 +173,11 @@ def vmem_estimate(spec: CompareSpec) -> int:
     if spec.topology == "one_vs_many":
         esize = 1 if spec.pack == "u8" else 4
         operands = (bm * 4 + bi * bm * esize + bi * 4) * d
+        return operands + bi * bm * 4 + 3 * bi * 2 * 4
+    if spec.topology == "hybrid":
+        # one_vs_many packed operands + the exact-row metadata tiles
+        # (meta [bn, 2] i32, hot sums [bn, 1] f32, V scalar)
+        operands = (bm * 4 + bi * bm + bi * 4 + bi * 2 * 4 + bi * 4 + 4) * d
         return operands + bi * bm * 4 + 3 * bi * 2 * 4
     if spec.topology == "mxu":
         enc = (bi + bj) * bm * spec.n_thresholds * 4   # f32 thermometer
@@ -618,6 +636,125 @@ def _emit_one_vs_many(spec: CompareSpec):
     return one_vs_many_pallas
 
 
+def _emit_hybrid(spec: CompareSpec):
+    bn, bm = spec.bi, spec.bm
+    acc = spec.acc_dtype
+
+    def kernel(q_ref, vloc_ref, meta_ref, hsum_ref, p_ref, pbase_ref,
+               flags_ref, sums_ref, fp_ref, *, n_mtiles, m, nh_tiles):
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        is_hot = i < nh_tiles
+
+        # Tail candidate: the UNMODIFIED packed one-vs-many math — tail
+        # verdicts/sums/fp must stay bit-identical to the flat slab.
+        # (Hot grid steps read a clamped tail tile whose result is
+        # discarded by the select below.)
+        q = q_ref[...]                                 # [1, bm] int32
+        p = p_ref[...].astype(jnp.int32) + pbase_ref[...]
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, bm), 1) + j * bm
+        p = jnp.where(col < m, p, 0)                   # neutral pad lanes
+        d = p - q
+        t_le = jnp.all(d >= 0, axis=1, keepdims=True)
+        t_ge = jnp.all(d <= 0, axis=1, keepdims=True)
+        sp = jnp.sum(p, axis=1, keepdims=True).astype(jnp.float32)
+        sq = jnp.broadcast_to(
+            jnp.sum(q, axis=1, keepdims=True).astype(jnp.float32), sp.shape)
+
+        # Hot candidate: exact chain-prefix verdicts.  A hot row is the
+        # pair (v = minting-chain prefix length, n_private = events past
+        # the prefix); against the local chain at version V the order is
+        # an integer compare — no bloom cells, no Eq. 3 exposure.
+        V = vloc_ref[0, 0]
+        v = meta_ref[:, 0:1]
+        npriv = meta_ref[:, 1:2]
+        h_le = V <= v                                  # local chain ≼ peer
+        h_ge = jnp.logical_and(v <= V, npriv == 0)     # peer ≼ local chain
+
+        le = jnp.where(is_hot, h_le, t_le)
+        ge = jnp.where(is_hot, h_ge, t_ge)
+        cur = jnp.concatenate([le, ge], axis=1).astype(acc)
+        # sums[:, 0] accumulates sum(q) per m-tile for hot rows too, so
+        # the caller's sum_q (read off row 0) matches the tail engines
+        # bit for bit; sums[:, 1] of a hot row is its precomputed shadow
+        # sum, added once on the first m-tile.
+        s_other = jnp.where(
+            is_hot,
+            jnp.where(j == 0, hsum_ref[...], jnp.zeros_like(sp)), sp)
+        s_cur = jnp.concatenate([sq, s_other], axis=1)
+
+        @pl.when(j == 0)
+        def _init():
+            flags_ref[...] = cur
+            sums_ref[...] = s_cur
+
+        @pl.when(j > 0)
+        def _acc():
+            flags_ref[...] = flags_ref[...] & cur
+            sums_ref[...] = sums_ref[...] + s_cur
+
+        @pl.when(j == n_mtiles - 1)
+        def _finalize():
+            fp = _eq3_pair_finalize(sums_ref[...], m)
+            fp_ref[...] = jnp.where(is_hot, jnp.zeros_like(fp), fp)
+
+    @functools.partial(jax.jit, static_argnames=("m_true", "interpret"))
+    def hybrid_pallas(q, v_local, hot_meta, hot_sums, tail, tail_base, *,
+                      m_true=None, interpret=False):
+        """One query vs [exact hot rows ++ packed tail] in one sweep.
+
+        Outputs are stacked hot-first: rows [0, H) are the hot set
+        (exact flags, fp ≡ 0.0), rows [H, H+T) the packed tail (flags/
+        sums/fp bit-identical to the one_vs_many packed engine)."""
+        validate(spec, _backend(interpret))
+        H = hot_meta.shape[0]
+        T, m = tail.shape
+        assert q.shape == (1, m) and m % bm == 0, (q.shape, m, bm)
+        assert H % bn == 0 and T % bn == 0 and H > 0 and T > 0, (H, T, bn)
+        assert hot_meta.shape == (H, 2) and hot_sums.shape == (H, 1)
+        assert v_local.shape == (1, 1)
+        nh_tiles = H // bn
+        n_mtiles = m // bm
+        body = functools.partial(kernel, n_mtiles=n_mtiles,
+                                 m=m_true if m_true else m,
+                                 nh_tiles=nh_tiles)
+        # Hot tiles clamp the tail index maps to block 0 (and vice
+        # versa): every grid step fetches valid blocks, the select in
+        # the body discards the wrong-side result.
+        in_specs = [
+            pl.BlockSpec((1, bm), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((bn, 2),
+                         lambda i, j: (jnp.minimum(i, nh_tiles - 1), 0)),
+            pl.BlockSpec((bn, 1),
+                         lambda i, j: (jnp.minimum(i, nh_tiles - 1), 0)),
+            pl.BlockSpec((bn, bm),
+                         lambda i, j: (jnp.maximum(i - nh_tiles, 0), j)),
+            pl.BlockSpec((bn, 1),
+                         lambda i, j: (jnp.maximum(i - nh_tiles, 0), 0)),
+        ]
+        flags, sums, fp = pl.pallas_call(
+            body,
+            grid=(nh_tiles + T // bn, n_mtiles),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((bn, 2), lambda i, j: (i, 0)),
+                pl.BlockSpec((bn, 2), lambda i, j: (i, 0)),
+                pl.BlockSpec((bn, 2), lambda i, j: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((H + T, 2), acc),
+                jax.ShapeDtypeStruct((H + T, 2), jnp.float32),
+                jax.ShapeDtypeStruct((H + T, 2), jnp.float32),
+            ],
+            interpret=interpret,
+            **_compiler_params(spec, 2, interpret),
+        )(q, v_local, hot_meta, hot_sums, tail, tail_base)
+        return flags, sums, fp
+
+    return hybrid_pallas
+
+
 @functools.lru_cache(maxsize=None)
 def emit(spec: CompareSpec):
     """Validated, jitted wrapper for one point in the design space.
@@ -633,4 +770,6 @@ def emit(spec: CompareSpec):
         return _emit_rect_u8(spec)
     if spec.topology == "mxu":
         return _emit_mxu(spec)
+    if spec.topology == "hybrid":
+        return _emit_hybrid(spec)
     return _emit_one_vs_many(spec)

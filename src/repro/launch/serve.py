@@ -46,6 +46,15 @@ def main():
                          "TieredRegistry behind a streaming admission "
                          "pipeline (repro.serve) instead of the flat "
                          "engine slab")
+    ap.add_argument("--hybrid", action="store_true",
+                    help="serve session causality through the adaptive "
+                         "HybridEngine: exact clocks for the hot set "
+                         "over the packed bloom tail (repro.hybrid)")
+    ap.add_argument("--fp-budget", type=float, default=1e-4,
+                    help="declared Eq. 3 false-positive budget for "
+                         "--hybrid; AdaptivePolicy derives the tail "
+                         "(m, k) from it — operators set a budget, "
+                         "not clock geometry")
     ap.add_argument("--bench-serve", action="store_true",
                     help="run the serve churn benchmark (quick config) "
                          "and exit; heavier runs via "
@@ -109,6 +118,30 @@ def main():
               f"query={q.verdict}; tiers={tiers.occupancy()}")
         pipe.close()
         tiers.close()
+
+    if args.hybrid:
+        from repro.hybrid import HybridConfig, HybridEngine
+        hyb = HybridEngine(
+            HybridConfig(m=max(128, engine.clock.cfg.m),
+                         k=engine.clock.cfg.k,
+                         hot_capacity=max(16, 4 * args.batch),
+                         fp_budget=args.fp_budget),
+            observer=obs)
+        # mirror this run's decode steps into the local chain, then
+        # register the serving sessions as prefixes of it
+        hyb.advance_local(args.prompt_len + args.gen)
+        for i in range(args.batch):
+            hyb.admit(f"{session['sid']}/{i}",
+                      v=min(args.prompt_len + i, hyb.local_version))
+        for _ in range(3):
+            for i in range(min(4, args.batch)):
+                hyb.touch(f"{session['sid']}/{i}")
+        view = hyb.classify()
+        hot_n = int(view.hot.sum())
+        print(f"[serve] hybrid classify[{view.engine}]: "
+              f"{hot_n} hot (exact, fp=0) + {len(view.sids) - hot_n} tail "
+              f"rows, tail m={hyb.m}, fp_budget={args.fp_budget:g}, "
+              f"hot_fraction={hot_n / max(1, len(view.sids)):.2f}")
 
     if args.peers:
         from repro.launch.peers import parse_peers, transport_from_specs

@@ -65,6 +65,13 @@ class TierConfig:
     spill_batch: int = 256        # warm rows spilled per overflow
     cold_batch: int = 16384       # cold rows decoded per classify chunk
     spill_dir: Optional[str] = None   # cold file location (tmp when None)
+    # hysteresis: without these, two rows straddling a full hot slab
+    # can thrash — promote() resets the access count, making the fresh
+    # arrival the next eviction's first victim
+    min_residency: int = 16       # admissions a promoted row is
+                                  # eviction-immune for
+    max_migrations_per_window: int = 64   # promotions allowed per window
+    window: int = 1024            # touches per hysteresis window
 
 
 @dataclasses.dataclass
@@ -159,6 +166,11 @@ class TieredRegistry:
         self.promotions = 0
         self.demotions = 0
         self.spills = 0
+        # hysteresis bookkeeping
+        self._promoted_at: dict = {}
+        self._window_touches = 0
+        self._window_migrations = 0
+        self.promotion_deferrals = 0
 
     # ---- membership ----
     def __len__(self) -> int:
@@ -234,15 +246,28 @@ class TieredRegistry:
         del self._tier_of[sid]
         self._access.pop(sid, None)
         self._age.pop(sid, None)
+        self._promoted_at.pop(sid, None)
         self._note_occupancy()
 
     # ---- access-driven movement ----
     def touch(self, sid) -> None:
         """Count one access; crossing ``promote_after`` promotes the
-        session one tier toward the device."""
+        session one tier toward the device — unless this window's
+        migration budget is spent (hysteresis: an adversarial access
+        pattern at the hot boundary gets a bounded number of
+        representation moves per window, not one per touch)."""
+        self._window_touches += 1
+        if self._window_touches >= self.cfg.window:
+            self._window_touches = 0
+            self._window_migrations = 0
         self._access[sid] = self._access.get(sid, 0) + 1
         if (self._tier_of.get(sid) in ("warm", "cold")
                 and self._access[sid] >= self.cfg.promote_after):
+            if self._window_migrations >= self.cfg.max_migrations_per_window:
+                self.promotion_deferrals += 1
+                if self.obs:
+                    self.obs.metrics.counter("tier_promotion_deferred").inc()
+                return
             self.promote(sid)
 
     def promote(self, sid) -> None:
@@ -256,14 +281,27 @@ class TieredRegistry:
         self._tier_of.pop(sid, None)
         self.admit_many({sid: clock})
         self._access[sid] = 0          # fresh residency, fresh count
+        self._promoted_at[sid] = self._age_seq
         self.promotions += 1
+        self._window_migrations += 1
         if self.obs:
             self.obs.metrics.counter("tier_promotions",
                                      src=tier).inc()
 
     def _victims(self, sids, count: int) -> list:
-        """Least-touched first, oldest residency breaking ties."""
-        ranked = sorted(sids, key=lambda s: (self._access.get(s, 0),
+        """Least-touched first, oldest residency breaking ties.
+
+        Freshly promoted rows (within ``min_residency`` admissions) are
+        skipped while alternatives exist: ``promote`` resets the access
+        count, so without this immunity the row just pulled up would be
+        the very next eviction's first victim — the thrash loop the
+        hysteresis tests pin.  When every candidate is fresh the
+        eviction still proceeds (room must be made)."""
+        fresh = {s for s in sids
+                 if self._age_seq - self._promoted_at.get(s, -(1 << 62))
+                 < self.cfg.min_residency}
+        ranked = sorted(sids, key=lambda s: (s in fresh,
+                                             self._access.get(s, 0),
                                              self._age.get(s, 0)))
         return ranked[:count]
 

@@ -247,8 +247,9 @@ def test_autotune_sweep_emits_observer_spans(monkeypatch, tmp_path):
     obs = Observer(trace=Tracer(), metrics=MetricsRecorder())
     table = autotune.autotune_shapes([(16, 128)], observer=obs,
                                      interpret=True)
-    assert len(table) == 2                   # matrix + one_vs_many
+    assert len(table) == 3                   # matrix + one_vs_many + hybrid
     spans = [e for e in obs.trace.events() if e["name"] == "autotune.sweep"]
-    assert {e["attrs"]["op"] for e in spans} == {"matrix", "one_vs_many"}
+    assert {e["attrs"]["op"] for e in spans} == {"matrix", "one_vs_many",
+                                                "hybrid"}
     for e in spans:
         assert "winner" in e["attrs"] and e["attrs"]["measured"] >= 1

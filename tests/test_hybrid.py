@@ -1,0 +1,493 @@
+"""Hybrid causality engine invariants.
+
+The contracts under test:
+
+- **Exact hot rows are exact**: hot-set verdicts equal ground-truth set
+  containment with claimed AND measured fp ≡ 0, while tail verdicts
+  stay bit-identical to a flat packed slab at the same blocks — the
+  hybrid engine is an optimization, not a semantic.
+- **Geometry folds are exact**: ``fold_pow2`` equals re-minting at the
+  smaller modulus, so ``resize_tail`` changes no verdict and replays
+  bit-for-bit from its audit records.
+- **Movement is damped**: alternating access at the hot-set boundary
+  (hybrid engine AND tiered registry) performs a bounded number of
+  representation moves per window instead of thrashing.
+- **The exact-row wire frame is adversarial-proof**: truncation, bit
+  flips, version skew, trailing garbage all raise, never misparse
+  (same absolute contract as tests/test_wire_fuzz.py).
+- ``_pow2_bucket`` never pads a batch past the slab it indexes into.
+"""
+import dataclasses
+import struct
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.causal.engine import CausalEngine, PackedSlab
+from repro.causal.policy import CausalPolicy
+from repro.core import clock as bc
+from repro.core import wire
+from repro.core.hashing import stable_event_id
+from repro.fleet.registry import ClockRegistry, _pow2_bucket
+from repro.hybrid import (AdaptiveConfig, AdaptivePolicy, HybridConfig,
+                          HybridEngine, HybridSlab, derive_mk, fold_pow2,
+                          replay_resize)
+from repro.obs.audit import AuditTrail
+from repro.serve.tiers import TierConfig, TieredRegistry
+
+
+def _engine(m=256, V=48, **kw):
+    cfg = dict(m=m, k=4, hot_capacity=8, tail_capacity=64,
+               promote_after=2, min_residency=0,
+               max_migrations_per_window=1 << 30, window=1 << 30)
+    cfg.update(kw)
+    eng = HybridEngine(HybridConfig(**cfg))
+    eng.advance_local(V)
+    return eng
+
+
+def _priv(i, j=0):
+    return stable_event_id(b"test/priv", i, j)
+
+
+# ---------------------------------------------------------------------------
+# exact verdicts + tail bit-identity
+# ---------------------------------------------------------------------------
+
+def test_hot_verdicts_exact_with_zero_fp():
+    eng = _engine(V=32)
+    eng.admit("equal", v=32)
+    eng.admit("past", v=10)
+    eng.admit("conc", v=10, events=[_priv(1)])
+    eng.admit("tail", v=20)
+    for sid in ("equal", "past", "conc"):
+        eng.touch(sid)
+        eng.touch(sid)
+        assert eng.sessions[sid].hot
+    view = eng.classify()
+    assert view.verdict_of("equal") == "equal"
+    assert view.verdict_of("past") == "ancestor"
+    assert view.verdict_of("conc") == "concurrent"
+    hot = view.hot
+    assert hot.sum() == 3
+    np.testing.assert_array_equal(view.fp_q_before_p[hot], 0.0)
+    np.testing.assert_array_equal(view.fp_p_before_q[hot], 0.0)
+    # the dispatch went through the fused kernel, not a host loop
+    assert view.engine.startswith("fused_hot_tail")
+
+
+def test_tail_bit_identical_to_flat_packed_slab():
+    eng = _engine(V=48)
+    rng = np.random.default_rng(3)
+    for i in range(4):
+        eng.admit(f"hot/{i}", v=int(rng.integers(1, 8)))
+        eng.touch(f"hot/{i}")
+        eng.touch(f"hot/{i}")
+    for i in range(20):
+        eng.admit(f"tail/{i}", v=int(rng.integers(8, 48)),
+                  events=[_priv(i, j) for j in range(rng.integers(0, 3))])
+    bn, bm = 8, eng.m
+    view = eng.classify(bn=bn, bm=bm)
+    slab = eng.slab()
+    H = slab.hot_count
+    flat = eng.engine.classify(
+        eng.local_clock(),
+        PackedSlab(slab.cells_u8, slab.base, wide=slab.wide),
+        bn=bn, bm=bm)
+    for name in ("q_le_p", "p_le_q", "fp_q_before_p", "fp_p_before_q",
+                 "sum_p"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(view, name))[H:],
+            np.asarray(getattr(flat, name)), err_msg=name)
+
+
+def test_wide_tail_row_overlaid_at_shifted_index():
+    # a >255-span tail row rides the int32 side dict; with a hot set in
+    # front the overlay index must shift by H in the fused result
+    eng = _engine(V=16)
+    eng.admit("hot", v=4)
+    eng.touch("hot")
+    eng.touch("hot")
+    eng.admit("narrow", v=8)
+    eng.admit("wide", v=2, events=[_priv(9)] * 300)   # one cell count ~300
+    assert any(eng._t_wide), "span >255 must take the wide representation"
+    view = eng.classify()
+    assert view.verdict_of("hot") == "ancestor"
+    assert view.verdict_of("narrow") == "ancestor"
+    # 300 private events: concurrent with the local chain, and the
+    # verdict must come from the overlaid exact row, not a clipped u8
+    assert view.verdict_of("wide") == "concurrent"
+    assert "+wide_overlay" in view.engine
+
+
+def test_pairs_hot_hot_block_is_exact():
+    eng = _engine(V=24)
+    eng.admit("a", v=3)
+    eng.admit("b", v=5)
+    eng.admit("c", v=3, events=[_priv(7)])
+    eng.admit("t", v=20)
+    for sid in ("a", "b", "c"):
+        eng.touch(sid)
+        eng.touch(sid)
+    res, order = eng.pairs()
+    i = {sid: order.index(sid) for sid in order}
+    le = np.asarray(res.le, bool)
+    fp = np.asarray(res.fp, np.float32)
+    assert le[i["a"], i["b"]] and not le[i["b"], i["a"]]   # prefix order
+    assert not le[i["a"], i["c"]] and not le[i["c"], i["a"]] or \
+        le[i["a"], i["c"]]  # a ⊆ c: a's prefix is inside c's prefix+priv
+    # c has a private event b lacks: c ⋠ b even though v_c <= v_b
+    assert not le[i["c"], i["b"]]
+    H = 3
+    np.testing.assert_array_equal(fp[:H, :H], 0.0)
+    assert res.engine.endswith("+hot_exact")
+
+
+def test_pairs_guard_rejects_hot_slab_on_causal_engine():
+    eng = _engine(V=8)
+    eng.admit("h", v=2)
+    eng.touch("h")
+    eng.touch("h")
+    eng.admit("t", v=4)
+    with pytest.raises(ValueError, match="classify-only"):
+        eng.engine.pairs(eng.slab())
+
+
+def test_demote_re_mints_bit_identically():
+    eng = _engine(V=32)
+    eng.admit("s", v=13, events=[_priv(0)])
+    slot0 = eng.sessions["s"].slot
+    row0 = eng._tail_logical(slot0).copy()
+    eng.touch("s")
+    eng.touch("s")
+    assert eng.sessions["s"].hot
+    eng.demote("s")
+    np.testing.assert_array_equal(
+        eng._tail_logical(eng.sessions["s"].slot), row0)
+
+
+# ---------------------------------------------------------------------------
+# exact pow2 folds + fp-budget derivation + audited resize
+# ---------------------------------------------------------------------------
+
+def test_fold_pow2_equals_minting_small():
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, 1 << 32, 5000)
+    for m, new_m in ((512, 128), (256, 256), (1024, 128)):
+        minted_big = np.bincount(idx % m, minlength=m)
+        minted_small = np.bincount(idx % new_m, minlength=new_m)
+        np.testing.assert_array_equal(fold_pow2(minted_big, new_m),
+                                      minted_small)
+    with pytest.raises(ValueError):
+        fold_pow2(np.zeros(512), 96)      # not pow2
+    with pytest.raises(ValueError):
+        fold_pow2(np.zeros(512), 1024)    # growth is not a fold
+
+
+def test_derive_mk_respects_budget_and_monotonicity():
+    def claimed(m, sq, sp):
+        import math
+        inner = -math.expm1(sq * math.log1p(-1.0 / m))
+        return math.exp(sp * math.log(max(inner, 1e-300)))
+
+    sq = 1024.0
+    for budget in (1e-2, 1e-4, 1e-8):
+        for sp in (4.0, 64.0, 256.0):
+            m, k = derive_mk(budget, sq, sp, m_max=1 << 20, k=4)
+            assert claimed(m, sq, sp) <= budget or m == 1 << 20
+            assert 1 <= k <= 8
+    # smaller budget -> never a smaller m; larger binding Σp -> never larger
+    m_loose, _ = derive_mk(1e-2, sq, 64.0, m_max=1 << 20, k=4)
+    m_tight, _ = derive_mk(1e-8, sq, 64.0, m_max=1 << 20, k=4)
+    assert m_tight >= m_loose
+    m_small_p, _ = derive_mk(1e-4, sq, 4.0, m_max=1 << 20, k=4)
+    m_big_p, _ = derive_mk(1e-4, sq, 256.0, m_max=1 << 20, k=4)
+    assert m_big_p <= m_small_p
+    # floor and degenerate operating points
+    m, _ = derive_mk(1.0, sq, 256.0, m_max=1 << 20, k=4, m_min=256)
+    assert m >= 256
+    assert derive_mk(1e-4, sq, 0.0, m_max=512, k=4) == (512, 4)
+    with pytest.raises(ValueError):
+        derive_mk(0.0, sq, 64.0, m_max=512, k=4)
+
+
+def test_resize_preserves_verdicts_and_replays_bit_for_bit():
+    trail = AuditTrail(store_frames=True)
+    eng = HybridEngine(HybridConfig(m=512, k=4, hot_capacity=4,
+                                    tail_capacity=32), audit=trail)
+    eng.advance_local(64)
+    rng = np.random.default_rng(7)
+    truth = {}
+    for i in range(12):
+        v = int(rng.integers(16, 64))
+        npriv = int(rng.integers(0, 2))
+        eng.admit(f"s{i}", v=v, events=[_priv(i, j) for j in range(npriv)])
+        truth[f"s{i}"] = "ancestor" if npriv == 0 else "concurrent"
+    before = eng.classify()
+    eng.resize_tail(128, detail="test")
+    assert eng.m == 128
+    # verdicts at the new geometry equal minting there outright (the
+    # fold is exact), so like any smaller bloom it may add claimed fps
+    # — but it can NEVER lose a true verdict
+    after = eng.classify()
+    for sid, want in truth.items():
+        assert before.verdict_of(sid) == want
+        if want == "ancestor":
+            assert after.verdict_of(sid) == "ancestor"
+        else:
+            assert after.verdict_of(sid) in ("concurrent", "ancestor")
+    for sid, s in eng.sessions.items():
+        np.testing.assert_array_equal(
+            eng._tail_logical(s.slot), eng._mint_cells(s),
+            err_msg=f"{sid}: fold diverged from minting at new_m")
+    rep = replay_resize(trail)
+    assert rep.ok and rep.checked == 12 and rep.matched == 12, rep.summary()
+    # a tampered audit frame must be caught, not silently replayed
+    rec = next(r for r in trail.records if r.kind == "resize_row")
+    snap = wire.decode_clock(rec.local_frame)
+    snap["cells"] = np.asarray(snap["cells"]).copy()
+    snap["cells"][0] += 1
+    rec.local_frame = wire.encode_clock(snap)
+    assert not replay_resize(trail).ok
+
+
+def test_adaptive_policy_folds_once_budget_allows():
+    eng = _engine(m=512, V=128, hot_capacity=4, promote_after=1)
+    eng.admit("tiny", v=1)
+    eng.touch("tiny")
+    assert eng.sessions["tiny"].hot
+    for i in range(6):
+        eng.admit(f"t{i}", v=64 + i)
+    eng.adaptive = AdaptivePolicy(eng, AdaptiveConfig(fp_budget=1e-4,
+                                                      window=2))
+    eng.classify()
+    assert eng.resizes == 0          # window not closed yet
+    eng.classify()
+    assert eng.resizes == 1 and eng.m < 512
+    assert eng.adaptive.last_recommendation is not None
+    # with the tiny-Σp session in the TAIL the same budget must veto
+    # any shrink: the binding row pins the geometry
+    eng2 = _engine(m=512, V=128, hot_capacity=4)
+    eng2.admit("tiny", v=1)
+    for i in range(6):
+        eng2.admit(f"t{i}", v=64 + i)
+    eng2.adaptive = AdaptivePolicy(eng2, AdaptiveConfig(fp_budget=1e-4,
+                                                        window=1))
+    eng2.classify()
+    assert eng2.resizes == 0 and eng2.m == 512
+
+
+# ---------------------------------------------------------------------------
+# hysteresis: bounded representation moves at the hot-set boundary
+# ---------------------------------------------------------------------------
+
+def test_hybrid_boundary_thrash_bounded_per_window():
+    cap = 4
+    eng = _engine(V=16, hot_capacity=1, promote_after=1,
+                  min_residency=0, max_migrations_per_window=cap,
+                  window=10_000)
+    eng.admit("a", v=2)
+    eng.admit("b", v=3)
+    # escalating alternation: each round the cold session out-touches
+    # the hot one, which without a budget would swap representations
+    # every single round (2 migrations per swap)
+    for r in range(50):
+        cold = "b" if eng.sessions["a"].hot else "a"
+        for _ in range(r + 2):
+            eng.touch(cold)
+    assert eng.promotions + eng.demotions <= cap, \
+        (eng.promotions, eng.demotions)
+    # the engine still classifies correctly after the adversarial churn
+    view = eng.classify()
+    assert view.verdict_of("a") == "ancestor"
+    assert view.verdict_of("b") == "ancestor"
+
+
+def test_hybrid_min_residency_shields_fresh_promotions():
+    eng = _engine(V=16, hot_capacity=1, promote_after=1,
+                  min_residency=3, max_migrations_per_window=1 << 30,
+                  window=4)
+    eng.admit("a", v=2)
+    eng.admit("b", v=3)
+    eng.touch("a")
+    assert eng.sessions["a"].hot and eng.promotions == 1
+    promoted_at = eng.sessions["a"].promoted_window
+    for _ in range(40):
+        eng.touch("b")
+        if eng._window_idx - promoted_at < 3:
+            assert eng.demotions == 0, \
+                "fresh promotion demoted inside its residency window"
+    assert eng.demotions >= 1     # immunity expires, movement resumes
+
+
+def test_tiered_registry_boundary_thrash_bounded():
+    m, k = 32, 3
+    rng = np.random.default_rng(5)
+
+    def clock():
+        return bc.BloomClock(
+            cells=jnp.asarray(rng.integers(0, 5, m), jnp.int32),
+            base=jnp.zeros((), jnp.int32), k=k)
+
+    budget = 4
+    t = TieredRegistry(
+        TierConfig(hot_capacity=2, warm_capacity=8, promote_after=1,
+                   demote_batch=1, min_residency=16,
+                   max_migrations_per_window=budget, window=10_000),
+        m=m, k=k)
+    t.admit_many({f"s{i}": clock() for i in range(8)})
+    # three favorites cycling through a 2-slot hot tier: every touch of
+    # whichever is currently cold would promote (evicting another
+    # favorite) — unbounded thrash without the per-window budget
+    warm = [s for s, tier in t._tier_of.items() if tier != "hot"][:3]
+    base_promotions = t.promotions
+    for _ in range(50):
+        for sid in warm:
+            t.touch(sid)
+    assert t.promotions - base_promotions <= budget
+    assert t.promotion_deferrals > 0, \
+        "the migration budget never engaged under alternating access"
+    t.close()
+
+
+def test_tiered_victims_skip_fresh_promotions():
+    t = TieredRegistry(
+        TierConfig(hot_capacity=4, warm_capacity=8, promote_after=1,
+                   demote_batch=1, min_residency=16,
+                   max_migrations_per_window=1 << 30, window=1 << 30),
+        m=32, k=3)
+    rng = np.random.default_rng(6)
+    t.admit_many({f"s{i}": bc.BloomClock(
+        cells=jnp.asarray(rng.integers(0, 5, 32), jnp.int32),
+        base=jnp.zeros((), jnp.int32), k=3) for i in range(4)})
+    t.promote("s0")  # no-op if already hot; records residency either way
+    t._promoted_at["s0"] = t._age_seq
+    victims = t._victims(["s0", "s1", "s2", "s3"], 2)
+    assert "s0" not in victims, "fresh promotion must not be first victim"
+    # when EVERY candidate is fresh, eviction still proceeds
+    for s in ("s1", "s2", "s3"):
+        t._promoted_at[s] = t._age_seq
+    assert len(t._victims(["s0", "s1", "s2", "s3"], 2)) == 2
+    t.close()
+
+
+# ---------------------------------------------------------------------------
+# _pow2_bucket: padded batches never outgrow the slab
+# ---------------------------------------------------------------------------
+
+def test_pow2_bucket_clamps_at_capacity():
+    assert _pow2_bucket(0) == 0
+    assert _pow2_bucket(1) == 1
+    assert _pow2_bucket(5) == 8
+    assert _pow2_bucket(8) == 8
+    assert _pow2_bucket(9) == 16
+    # the regression: one past a non-pow2 capacity used to round up to
+    # a bucket LARGER than the slab the padded indices scatter into
+    for cap in (6, 12, 100):
+        assert _pow2_bucket(cap + 1, cap) == cap
+        assert _pow2_bucket(cap, cap) <= cap
+    assert _pow2_bucket(9, 16) == 16   # clamp only binds at the slab edge
+
+
+def test_registry_full_capacity_batch_admit():
+    cap = 12          # non-pow2: the pre-clamp bucket would be 16
+    reg = ClockRegistry(capacity=cap, m=32, k=3,
+                        policy=CausalPolicy(fp_threshold=1.0))
+    rng = np.random.default_rng(2)
+    clocks = {f"s{i}": bc.BloomClock(
+        cells=jnp.asarray(rng.integers(0, 5, 32), jnp.int32),
+        base=jnp.zeros((), jnp.int32), k=3) for i in range(cap)}
+    reg.admit_many(clocks)
+    assert len(reg) == cap
+    slots = [reg.slot_of(s) for s in clocks]
+    assert sorted(slots) == list(range(cap))
+
+
+# ---------------------------------------------------------------------------
+# exact-row wire frames: the same absolute adversarial contract as
+# clock frames (tests/test_wire_fuzz.py)
+# ---------------------------------------------------------------------------
+
+METAS = {
+    "empty": {"v": 0, "events": (), "k": 4},
+    "plain": {"v": 7, "events": ((1, 2), (3, 4), (5, 6)), "k": 4},
+    "big": {"v": 1 << 40,
+            "events": tuple((int(h), int(l)) for h, l in
+                            (_priv(i) for i in range(5))), "k": 8},
+}
+
+
+@pytest.mark.parametrize("name", sorted(METAS))
+def test_exact_frame_roundtrip(name):
+    meta = METAS[name]
+    buf = wire.encode_exact(meta)
+    assert len(buf) == wire.exact_frame_nbytes(len(meta["events"]))
+    got = wire.decode_exact(buf)
+    assert got["v"] == meta["v"]
+    assert got["k"] == meta["k"]
+    assert got["n_private"] == len(meta["events"])
+    assert got["events"] == tuple(meta["events"])
+
+
+def test_exact_frame_rejects_event_count_mismatch():
+    with pytest.raises(ValueError, match="disagrees"):
+        wire.encode_exact({"v": 1, "n_private": 2, "events": ((1, 2),),
+                           "k": 4})
+
+
+@pytest.mark.parametrize("name", sorted(METAS))
+def test_exact_frame_truncation_always_raises(name):
+    buf = wire.encode_exact(METAS[name])
+    for cut in range(len(buf)):
+        with pytest.raises(wire.WireFormatError):
+            wire.decode_exact(buf[:cut])
+
+
+@pytest.mark.parametrize("name", sorted(METAS))
+def test_exact_frame_single_bit_flips_never_misparse(name):
+    meta = METAS[name]
+    buf = bytearray(wire.encode_exact(meta))
+    for byte in range(len(buf)):
+        for bit in range(8):
+            buf[byte] ^= 1 << bit
+            try:
+                got = wire.decode_exact(bytes(buf))
+            except wire.WireFormatError:
+                pass
+            else:       # a flip may only ever decode to the ORIGINAL
+                assert got["v"] == meta["v"]
+                assert got["events"] == tuple(meta["events"])
+            buf[byte] ^= 1 << bit
+
+
+def test_exact_frame_version_skew_rejected_even_resealed():
+    assert wire.WIRE_VERSION == 2
+    buf = bytearray(wire.encode_exact(METAS["plain"]))
+    for skew in (-1, 1, 5):
+        bad = bytearray(buf)
+        bad[2] = (wire.WIRE_VERSION + skew) & 0xFF
+        body = bytes(bad[:-4])
+        resealed = body + struct.pack("!I", zlib.crc32(body))
+        with pytest.raises(wire.WireFormatError, match="version"):
+            wire.decode_exact(resealed)
+
+
+def test_exact_frame_trailing_garbage_rejected():
+    buf = wire.encode_exact(METAS["plain"])
+    with pytest.raises(wire.WireFormatError, match="oversized"):
+        wire.decode_exact(buf + b"\x00")
+
+
+def test_exact_frame_roundtrips_engine_hot_row():
+    eng = _engine(V=12)
+    eng.admit("s", v=9, events=[_priv(0), _priv(1)])
+    s = eng.sessions["s"]
+    frame = wire.encode_exact({"v": s.v, "events": s.events, "k": eng.k})
+    got = wire.decode_exact(frame)
+    # a receiver re-mints the SAME shadow bloom row from the frame
+    clone = dataclasses.replace(s, events=tuple(got["events"]),
+                                v=got["v"])
+    np.testing.assert_array_equal(eng._mint_cells(clone),
+                                  eng._mint_cells(s))
